@@ -1,0 +1,49 @@
+"""Benchmark: LDA strong scaling (paper §5, Fig. 5 + Table 1).
+
+Fixed corpus, growing worker count; speedup = throughput(P)/throughput(P0)
+compared against ideal linear scaling, under VAP (the paper's configuration)
+and BSP (the baseline it beats).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import NetworkModel, bsp, vap
+from repro.data import synthetic_corpus
+from repro.apps import lda
+
+WORKER_COUNTS = (4, 8, 16)
+CLOCKS = 4
+
+
+def run() -> List[Dict]:
+    corpus = synthetic_corpus(n_docs=48, vocab_size=120, n_topics=6,
+                              doc_len=60, seed=0)
+    rows = []
+    for pol_name, make_pol in (("vap", lambda: vap(50.0)), ("bsp", bsp)):
+        base_thr = None
+        for P in WORKER_COUNTS:
+            lls, stats = lda.run_lda(
+                corpus, n_topics=6, policy=make_pol(), n_workers=P,
+                n_clocks=CLOCKS, seed=0,
+                network=NetworkModel(base_delay=0.15, jitter=0.1, seed=0),
+                straggler={0: 1.5}, collect_stats=True)
+            # throughput in tokens swept per sim second
+            thr = corpus.n_tokens * CLOCKS / stats.sim_time
+            if base_thr is None:
+                base_thr = thr / P          # per-worker baseline
+            rows.append({
+                "name": f"lda_scaling/{pol_name}/P{P}",
+                "workers": P,
+                "tokens_per_s": thr,
+                "speedup": thr / (base_thr * WORKER_COUNTS[0]),
+                "ideal": P / WORKER_COUNTS[0],
+                "ll_final": lls[-1],
+                "sim_time": stats.sim_time,
+            })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

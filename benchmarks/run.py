@@ -1,0 +1,75 @@
+"""Benchmark harness — one section per paper table/figure + the roofline.
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention, plus the
+full result dicts, and regenerates results/roofline.md when dry-run
+artifacts exist.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def _csv_line(row: dict) -> str:
+    name = row.pop("name")
+    us = row.pop("us_per_call", row.pop("sim_time", 0.0) * 1e6
+                 if "sim_time" in row else 0.0)
+    derived = ";".join(f"{k}={v:.6g}" if isinstance(v, float) else f"{k}={v}"
+                       for k, v in row.items())
+    return f"{name},{us:.1f},{derived}"
+
+
+def main() -> None:
+    all_rows = []
+    t0 = time.time()
+
+    print("# --- consistency models on SGD (paper §2/§3) ---")
+    from benchmarks import bench_consistency
+    for r in bench_consistency.run():
+        all_rows.append(dict(r))
+        print(_csv_line(r))
+
+    print("# --- LDA convergence per policy (paper §5) ---")
+    from benchmarks import bench_lda
+    for r in bench_lda.run():
+        all_rows.append(dict(r))
+        print(_csv_line(r))
+
+    print("# --- LDA strong scaling (paper Fig. 5) ---")
+    from benchmarks import bench_scalability
+    for r in bench_scalability.run():
+        all_rows.append(dict(r))
+        print(_csv_line(r))
+
+    print("# --- kernel reference-path microbenchmarks ---")
+    from benchmarks import bench_kernels
+    for r in bench_kernels.run():
+        all_rows.append(dict(r))
+        print(_csv_line(r))
+
+    print("# --- roofline (from dry-run artifacts) ---")
+    from benchmarks import roofline
+    rows = roofline.load_all()
+    if rows:
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            print(f"roofline/{r['arch']}/{r['shape']},0.0,"
+                  f"bound={r['dominant']};step_s={r['bound_step_s']:.4g};"
+                  f"useful={r['useful_fraction']:.2f};"
+                  f"peak_gib={r['peak_gib']:.1f}")
+        roofline.main()
+    else:
+        print("# (no dry-run artifacts; run repro.launch.dryrun --all first)")
+
+    out = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "bench_results.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+    print(f"# done in {time.time() - t0:.1f}s -> {out}")
+
+
+if __name__ == "__main__":
+    main()

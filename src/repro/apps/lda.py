@@ -1,0 +1,123 @@
+"""Collapsed-Gibbs LDA on the asynchronous parameter server (paper §5).
+
+The shared state lives in two PS keys — ``word_topic`` (V × K counts) and
+``topic`` (K counts) — exactly the tables YahooLDA/Petuum shard; per-document
+topic counts and assignments are worker-local.  Each clock a worker sweeps
+its document shard with collapsed Gibbs against its (possibly stale /
+value-bounded) view and emits the count deltas, which is the paper's
+evaluation workload for the consistency models.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.policies import Policy
+from repro.core.server import AsyncPS, NetworkModel
+from repro.data.lda_corpus import LDACorpus
+
+
+class _WorkerState:
+    def __init__(self, docs, n_topics: int, rng: np.random.Generator):
+        self.docs = docs
+        self.assign = [rng.integers(0, n_topics, size=len(d)) for d in docs]
+        self.doc_topic = np.zeros((len(docs), n_topics), dtype=np.float64)
+        for i, zs in enumerate(self.assign):
+            np.add.at(self.doc_topic[i], zs, 1.0)
+
+
+def _initial_counts(states: List[_WorkerState], vocab: int, K: int):
+    wt = np.zeros((vocab, K))
+    tc = np.zeros(K)
+    for st in states:
+        for d, zs in zip(st.docs, st.assign):
+            np.add.at(wt, (d, zs), 1.0)
+            np.add.at(tc, zs, 1.0)
+    return wt, tc
+
+
+def log_likelihood(corpus: LDACorpus, wt: np.ndarray, tc: np.ndarray,
+                   doc_topic: np.ndarray, doc_ids, alpha: float,
+                   beta: float) -> float:
+    """doc_topic rows follow the order of doc_ids (concatenated shards)."""
+    V, K = wt.shape
+    phi = (wt + beta) / (tc + V * beta)[None, :]           # (V, K)
+    ll = 0.0
+    for row, gid in enumerate(doc_ids):
+        d = corpus.docs[gid]
+        theta = doc_topic[row] + alpha
+        theta = theta / theta.sum()
+        p = phi[d] @ theta
+        ll += float(np.log(np.maximum(p, 1e-12)).sum())
+    return ll
+
+
+def run_lda(corpus: LDACorpus, n_topics: int, policy: Policy,
+            n_workers: int, n_clocks: int, alpha: float = 0.1,
+            beta: float = 0.01, seed: int = 0,
+            network: Optional[NetworkModel] = None,
+            straggler=None, collect_stats: bool = False):
+    """Returns the per-clock corpus log-likelihood list (and stats if asked)."""
+    rng = np.random.default_rng(seed)
+    V, K = corpus.vocab_size, n_topics
+    shards = [list(range(w, corpus.n_docs, n_workers)) for w in range(n_workers)]
+    states = [_WorkerState([corpus.docs[i] for i in sh], K, rng)
+              for sh in shards]
+    wt0, tc0 = _initial_counts(states, V, K)
+
+    lls: List[float] = []
+
+    def update_fn(w: int, clock: int, view, wrng: np.random.Generator):
+        st = states[w]
+        wt = view.get("word_topic")
+        tc = view.get("topic")
+        d_wt = np.zeros_like(wt)
+        d_tc = np.zeros_like(tc)
+        for di, doc in enumerate(st.docs):
+            dt = st.doc_topic[di]
+            zs = st.assign[di]
+            for ti, word in enumerate(doc):
+                z = zs[ti]
+                # remove current assignment (local view)
+                dt[z] -= 1
+                d_wt[word, z] -= 1
+                d_tc[z] -= 1
+                nw = np.maximum(wt[word] + d_wt[word] + beta, beta)
+                nt = np.maximum(tc + d_tc + V * beta, V * beta)
+                p = (dt + alpha) * nw / nt
+                p = np.maximum(p, 1e-12)
+                z_new = wrng.choice(K, p=p / p.sum())
+                zs[ti] = z_new
+                dt[z_new] += 1
+                d_wt[word, z_new] += 1
+                d_tc[z_new] += 1
+        return {"word_topic": d_wt, "topic": d_tc}
+
+    # a clock sweeps the worker's shard once: compute time ∝ tokens owned
+    # (per-token Gibbs cost normalized to 1ms) — strong scaling shrinks it
+    tokens_of = [sum(len(d) for d in st.docs) for st in states]
+    ps = AsyncPS(n_workers, policy,
+                 {"word_topic": wt0, "topic": tc0},
+                 network=network or NetworkModel(seed=seed),
+                 compute_time=lambda w: 0.001 * tokens_of[w],
+                 straggler=straggler, seed=seed)
+
+    # wrap update_fn to record the log-likelihood once per full clock
+    done_clocks = [0]
+    orig = update_fn
+
+    def wrapped(w, clock, view, wrng):
+        out = orig(w, clock, view, wrng)
+        if w == 0:
+            wt = view.get("word_topic")
+            tc = view.get("topic")
+            dt_all = np.concatenate([s.doc_topic for s in states])
+            ids = [i for sh in shards for i in sh]
+            lls.append(log_likelihood(corpus, wt, tc, dt_all, ids, alpha, beta))
+        return out
+
+    stats = ps.run(wrapped, n_clocks)
+    if collect_stats:
+        return lls, stats
+    return lls

@@ -1,0 +1,82 @@
+"""Pytree checkpointing to npz (+ json metadata).
+
+Checkpoints are taken at sync boundaries: the trainer calls
+``core.sync.force_sync`` first, so the saved parameters are the
+fully-synchronized state (every worker's updates visible — the paper's
+"true" sequence x_t), making checkpoints consistency-model independent.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: PyTree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save_checkpoint(directory: str, step: int, tree: PyTree,
+                    metadata: Optional[dict] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp"
+    arrays = _flatten_with_paths(tree)
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    meta = {"step": step, "n_arrays": len(arrays), **(metadata or {})}
+    with open(os.path.join(directory, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return path
+
+
+def restore_checkpoint(directory: str, like: PyTree,
+                       step: Optional[int] = None) -> Tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = _SEP.join(_path_str(x) for x in p)
+            arr = data[key]
+            if arr.shape != leaf.shape:
+                raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                                 f"expected {leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves)
+    return tree, step
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

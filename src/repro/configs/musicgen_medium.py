@@ -1,0 +1,28 @@
+"""MusicGen-medium [arXiv:2306.05284] — decoder-only LM over EnCodec tokens.
+
+The EnCodec tokenizer and the T5 text encoder are STUBBED per the brief:
+``input_specs`` supplies audio-token ids (vocab 2048) plus precomputed
+conditioning embeddings consumed as a prefix (cross-attention replaced by
+prefix conditioning — DESIGN.md §5).  24 heads are not divisible by tp=16,
+so this config uses the seq-TP strategy.
+"""
+from repro.configs.base import ModelConfig, FrontendConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    arch_type="audio",
+    source="arXiv:2306.05284",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_head=64,
+    d_ff=6144,
+    vocab_size=2048,
+    norm_kind="layernorm",
+    act="gelu",
+    gated_mlp=False,           # MusicGen uses a plain (non-gated) MLP
+    rope_theta=10_000.0,       # deviation: sinusoidal absolute -> RoPE (DESIGN §5)
+    frontend=FrontendConfig(kind="audio", n_embeds=64, embed_dim=1536),
+    tp_strategy="seq",
+)

@@ -1,0 +1,71 @@
+"""Client library: the Get/Inc/Clock application API (paper §4.1–4.2).
+
+The thread cache is a write-back overlay on the process cache: Gets are
+serviced locally (base view + own pending writes → read-my-writes), Incs
+accumulate in the write-back cache and are handed to the parameter server at
+the end of the period (coalesced per key — the paper's message batching).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.server import AsyncPS, ViewHandle
+
+
+class ThreadCache:
+    """Write-back thread cache for one worker thread."""
+
+    def __init__(self, view: ViewHandle):
+        self._view = view
+        self._writes: Dict[str, np.ndarray] = {}
+        self.hits = 0
+        self.misses = 0
+        self._local: Dict[str, np.ndarray] = {}
+
+    # --- Get(table, row) -----------------------------------------------------
+    def get(self, key: str) -> np.ndarray:
+        if key in self._local:
+            self.hits += 1
+            return self._local[key]
+        self.misses += 1   # fetch from process cache
+        base = self._view.get(key)
+        w = self._writes.get(key)
+        val = base + w if w is not None else base
+        self._local[key] = val
+        return val
+
+    # --- Inc(table, row, delta) ----------------------------------------------
+    def inc(self, key: str, delta) -> None:
+        delta = np.asarray(delta, dtype=np.float64)
+        if key in self._writes:
+            self._writes[key] = self._writes[key] + delta
+        else:
+            self._writes[key] = delta.copy()
+        if key in self._local:          # read-my-writes within the period
+            self._local[key] = self._local[key] + delta
+
+    # --- Clock() → write-back ------------------------------------------------
+    def flush(self) -> Dict[str, np.ndarray]:
+        out = self._writes
+        self._writes = {}
+        self._local = {}
+        return out
+
+
+def app_update_fn(app: Callable) -> Callable:
+    """Adapt `app(worker, clock, cache: ThreadCache, rng)` (imperative
+    Get/Inc style) into the simulator's batch update_fn."""
+
+    def update_fn(worker: int, clock: int, view: ViewHandle, rng) -> Dict[str, np.ndarray]:
+        cache = ThreadCache(view)
+        app(worker, clock, cache, rng)
+        return cache.flush()
+
+    return update_fn
+
+
+def run_app(ps: AsyncPS, app: Callable, n_clocks: int, **kw):
+    """Convenience: run an imperative Get/Inc/Clock app on the simulator."""
+    return ps.run(app_update_fn(app), n_clocks, **kw)

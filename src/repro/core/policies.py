@@ -1,0 +1,95 @@
+"""Consistency policies — the paper's §2 models as data.
+
+A :class:`Policy` is pure data; the *Consistency Controller*
+(:mod:`repro.core.controller`) interprets it.  This mirrors the paper's §4.3
+split between *Consistency Policy* (data structure) and *Consistency
+Controller* (logic), and the same Policy object drives both the faithful
+asynchronous simulator (:mod:`repro.core.server`) and the TPU/SPMD sync layer
+(:mod:`repro.core.sync`).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ConsistencySpec
+
+INF = math.inf
+
+
+@dataclass(frozen=True)
+class Policy:
+    """A bounded-asynchronous consistency policy.
+
+    kind         one of bsp | ssp | cap | vap | cvap
+    staleness    s — clock bound (ssp / cap / cvap).  A worker at clock c is
+                 guaranteed to see all updates timestamped ≤ c - s - 1.
+    value_bound  v_thr — value bound (vap / cvap).  A worker's accumulated
+                 unsynchronized updates per parameter stay ≤ max(u, v_thr).
+    strong       strong-VAP: additionally bounds the total magnitude of
+                 *half-synchronized* updates per parameter by max(u, v_thr),
+                 giving divergence ≤ 2·max(u, v_thr) independent of P.
+    push_at_clock_only
+                 SSP semantics: updates leave the worker only during the
+                 synchronization phase.  CAP/VAP/CVAP push updates as soon as
+                 network bandwidth is available.
+    """
+
+    kind: str
+    staleness: int = 0
+    value_bound: float = INF
+    strong: bool = False
+    push_at_clock_only: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("bsp", "ssp", "cap", "vap", "cvap"):
+            raise ValueError(f"unknown consistency kind {self.kind!r}")
+        if self.staleness < 0:
+            raise ValueError("staleness must be >= 0")
+        if self.value_bound <= 0:
+            raise ValueError("value_bound must be > 0")
+
+    # --- which bounds are active -------------------------------------------
+    @property
+    def clock_bounded(self) -> bool:
+        return self.kind in ("bsp", "ssp", "cap", "cvap")
+
+    @property
+    def value_bounded(self) -> bool:
+        return self.kind in ("vap", "cvap") and self.value_bound != INF
+
+
+def bsp() -> Policy:
+    return Policy("bsp", staleness=0, push_at_clock_only=True)
+
+
+def ssp(staleness: int) -> Policy:
+    return Policy("ssp", staleness=staleness, push_at_clock_only=True)
+
+
+def cap(staleness: int) -> Policy:
+    return Policy("cap", staleness=staleness)
+
+
+def vap(value_bound: float, strong: bool = False) -> Policy:
+    return Policy("vap", value_bound=value_bound, strong=strong)
+
+
+def cvap(staleness: int, value_bound: float, strong: bool = False) -> Policy:
+    return Policy("cvap", staleness=staleness, value_bound=value_bound,
+                  strong=strong)
+
+
+def from_spec(spec: ConsistencySpec) -> Policy:
+    kind = spec.model.lower()
+    if kind == "bsp":
+        return bsp()
+    if kind == "ssp":
+        return ssp(spec.staleness)
+    if kind == "cap":
+        return cap(spec.staleness)
+    if kind == "vap":
+        return vap(spec.value_bound or INF, spec.strong)
+    if kind == "cvap":
+        return cvap(spec.staleness, spec.value_bound or INF, spec.strong)
+    raise ValueError(f"unknown consistency model {spec.model!r}")

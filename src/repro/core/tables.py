@@ -1,0 +1,133 @@
+"""Petuum-PS table abstraction (paper §4.1).
+
+Shared parameters are organized as tables; an element is addressed by
+(table_id, row_id, column_id).  Rows are the unit of distribution and
+transmission; both dense and sparse rows are supported.  For vectorized ML
+workloads a whole row is a numpy array and updates are row deltas — the
+consistency bounds (VAP) are enforced *element-wise*, matching the paper's
+per-parameter semantics.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional, Tuple
+
+import numpy as np
+
+
+class Row:
+    """A dense row of parameters."""
+
+    __slots__ = ("data",)
+
+    def __init__(self, n_cols: int, dtype=np.float64, data: Optional[np.ndarray] = None):
+        self.data = np.zeros(n_cols, dtype=dtype) if data is None else data
+
+    def get(self, col: Optional[int] = None):
+        return self.data.copy() if col is None else self.data[col]
+
+    def inc(self, delta, col: Optional[int] = None) -> None:
+        if col is None:
+            self.data += delta
+        else:
+            self.data[col] += delta
+
+
+class SparseRow:
+    """A sparse row: dict of column -> value."""
+
+    __slots__ = ("cols",)
+
+    def __init__(self):
+        self.cols: Dict[int, float] = {}
+
+    def get(self, col: Optional[int] = None):
+        if col is None:
+            return dict(self.cols)
+        return self.cols.get(col, 0.0)
+
+    def inc(self, delta, col: Optional[int] = None) -> None:
+        if col is None:  # delta is a dict
+            for c, d in delta.items():
+                v = self.cols.get(c, 0.0) + d
+                if v == 0.0:
+                    self.cols.pop(c, None)
+                else:
+                    self.cols[c] = v
+        else:
+            v = self.cols.get(col, 0.0) + delta
+            if v == 0.0:
+                self.cols.pop(col, None)
+            else:
+                self.cols[col] = v
+
+
+class Table:
+    """A (possibly sparse) table of rows, hash-partitionable by row id."""
+
+    def __init__(self, table_id: str, n_cols: int, dtype=np.float64,
+                 sparse: bool = False):
+        self.table_id = table_id
+        self.n_cols = n_cols
+        self.dtype = dtype
+        self.sparse = sparse
+        self._rows: Dict[int, object] = {}
+
+    def row(self, row_id: int):
+        r = self._rows.get(row_id)
+        if r is None:
+            r = SparseRow() if self.sparse else Row(self.n_cols, self.dtype)
+            self._rows[row_id] = r
+        return r
+
+    def get(self, row_id: int, col: Optional[int] = None):
+        return self.row(row_id).get(col)
+
+    def inc(self, row_id: int, delta, col: Optional[int] = None) -> None:
+        self.row(row_id).inc(delta, col)
+
+    def rows(self) -> Iterator[Tuple[int, object]]:
+        return iter(self._rows.items())
+
+    def server_partition(self, n_servers: int, server: int):
+        """Rows owned by `server` under hash partitioning (paper §4.1)."""
+        return {rid: r for rid, r in self._rows.items()
+                if rid % n_servers == server}
+
+    def dense_snapshot(self, n_rows: int) -> np.ndarray:
+        out = np.zeros((n_rows, self.n_cols), dtype=self.dtype)
+        for rid, r in self._rows.items():
+            if rid < n_rows:
+                if self.sparse:
+                    for c, v in r.cols.items():
+                        out[rid, c] = v
+                else:
+                    out[rid] = r.data
+        return out
+
+
+class TableGroup:
+    """All tables of one application.  Different tables may use different
+    consistency policies (paper §4.1) — the policy map lives here."""
+
+    def __init__(self):
+        self._tables: Dict[str, Table] = {}
+        self.policies: Dict[str, object] = {}
+
+    def create(self, table_id: str, n_cols: int, dtype=np.float64,
+               sparse: bool = False, policy=None) -> Table:
+        if table_id in self._tables:
+            raise KeyError(f"table {table_id!r} already exists")
+        t = Table(table_id, n_cols, dtype, sparse)
+        self._tables[table_id] = t
+        if policy is not None:
+            self.policies[table_id] = policy
+        return t
+
+    def __getitem__(self, table_id: str) -> Table:
+        return self._tables[table_id]
+
+    def __contains__(self, table_id: str) -> bool:
+        return table_id in self._tables
+
+    def __iter__(self):
+        return iter(self._tables.values())

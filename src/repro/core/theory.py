@@ -1,0 +1,66 @@
+"""Theoretical bounds from the paper (§2.2, §3) as executable formulas.
+
+These are used by the validation tests and benchmarks to compare measured
+quantities against the paper's claims:
+
+* Lemma 1   : |A_t| + |B_t| ≤ 2·v_thr·(P-1)
+* Theorem 1 : R[X] ≤ σL²√T + F²√T/σ + 2σLv_thr·P·√T  with σ = F/(L√(v_thr·P))
+* weak VAP  : |θ_A - θ_B| ≤ max(u, v_thr)·P
+* strong VAP: |θ_A - θ_B| ≤ 2·max(u, v_thr)
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def sigma_star(F: float, L: float, v_thr: float, P: int) -> float:
+    """The paper's step-size constant σ = F / (L·sqrt(v_thr·P))."""
+    return F / (L * math.sqrt(max(v_thr * P, 1e-30)))
+
+
+def step_size(t: int, F: float, L: float, v_thr: float, P: int) -> float:
+    """η_t = σ/√t (t is 1-based)."""
+    return sigma_star(F, L, v_thr, P) / math.sqrt(t)
+
+
+def lemma1_bound(v_thr: float, P: int) -> float:
+    """Bound on the aggregate missing+extra update mass at any t."""
+    return 2.0 * v_thr * (P - 1)
+
+
+def theorem1_regret_bound(T: int, F: float, L: float, v_thr: float, P: int) -> float:
+    """Upper bound on the cumulative regret R[X] after T component steps."""
+    s = sigma_star(F, L, v_thr, P)
+    return (s * L**2 * math.sqrt(T)
+            + F**2 * math.sqrt(T) / s
+            + 2.0 * s * L * v_thr * P * math.sqrt(T))
+
+
+def theorem1_regret_curve(T: int, F: float, L: float, v_thr: float, P: int) -> np.ndarray:
+    """Bound evaluated at every t in [1, T] (for convergence plots)."""
+    t = np.arange(1, T + 1, dtype=np.float64)
+    s = sigma_star(F, L, v_thr, P)
+    return s * L**2 * np.sqrt(t) + F**2 * np.sqrt(t) / s + 2.0 * s * L * v_thr * P * np.sqrt(t)
+
+
+def weak_vap_divergence_bound(u: float, v_thr: float, P: int) -> float:
+    """|θ_A − θ_B| ≤ max(u, v_thr)·P under weak VAP (§2.2)."""
+    return max(u, v_thr) * P
+
+
+def strong_vap_divergence_bound(u: float, v_thr: float) -> float:
+    """|θ_A − θ_B| ≤ 2·max(u, v_thr) under strong VAP — independent of P."""
+    return 2.0 * max(u, v_thr)
+
+
+def regret_is_sublinear(regret: np.ndarray, tol: float = 0.0) -> bool:
+    """Check R[X]_t / t is (eventually) decreasing — the o(T) condition that
+    implies convergence in Theorem 1."""
+    t = np.arange(1, len(regret) + 1)
+    avg = regret / t
+    n = len(avg)
+    head = avg[: max(n // 4, 1)].mean()
+    tail = avg[-max(n // 4, 1):].mean()
+    return tail <= head + tol

@@ -1,0 +1,4 @@
+from repro.data.lda_corpus import LDACorpus, synthetic_corpus
+from repro.data.pipeline import SyntheticLM, batches
+
+__all__ = ["LDACorpus", "SyntheticLM", "batches", "synthetic_corpus"]

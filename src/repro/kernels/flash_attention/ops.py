@@ -1,0 +1,25 @@
+"""Public flash-attention op: dispatches Pallas kernel vs reference."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pallas_mode
+from repro.kernels.flash_attention import ref
+
+
+@partial(jax.jit, static_argnames=("window", "cap"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                    window: Optional[int] = None,
+                    cap: Optional[float] = None) -> jnp.ndarray:
+    mode = pallas_mode()
+    if mode in ("on", "interpret"):
+        from repro.kernels.flash_attention import kernel
+        return kernel.flash_attention_pallas(
+            q, k, v, q_pos, k_pos, window=window, cap=cap,
+            interpret=(mode == "interpret"))
+    return ref.attention(q, k, v, q_pos, k_pos, window=window, cap=cap)

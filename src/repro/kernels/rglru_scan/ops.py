@@ -1,0 +1,25 @@
+"""Public RG-LRU op: dispatches Pallas kernel vs jnp reference."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pallas_mode
+from repro.kernels.rglru_scan import ref
+
+
+@jax.jit
+def rglru(x: jnp.ndarray, r_gate: jnp.ndarray, i_gate: jnp.ndarray,
+          a_param: jnp.ndarray, initial: Optional[jnp.ndarray] = None,
+          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mode = pallas_mode()
+    if mode in ("on", "interpret"):
+        from repro.kernels.rglru_scan import kernel
+        return kernel.rglru_pallas(x, r_gate, i_gate, a_param, initial=initial,
+                                   interpret=(mode == "interpret"))
+    return ref.rglru(x, r_gate, i_gate, a_param, initial=initial)
+
+
+rglru_step = jax.jit(ref.rglru_step)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the RG-LRU linear recurrence (arXiv:2402.19427).
+
+Generic diagonal linear recurrence  h_t = a_t ⊙ h_{t-1} + b_t, computed with
+an associative scan (log-depth) — the kernel computes the same thing with a
+sequential blocked pass over sequence tiles.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def linear_recurrence(a: jnp.ndarray, b: jnp.ndarray,
+                      initial: Optional[jnp.ndarray] = None,
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """a, b: (batch, l, w); h_t = a_t h_{t-1} + b_t.  Returns (h, h_last)."""
+    f32 = jnp.float32
+    a32, b32 = a.astype(f32), b.astype(f32)
+    if initial is not None:
+        # fold the initial state into the first step's additive term
+        b32 = b32.at[:, 0].add(a32[:, 0] * initial.astype(f32))
+
+    def combine(left, right):
+        (al, bl), (ar, br) = left, right
+        return al * ar, ar * bl + br
+
+    ah, bh = lax.associative_scan(combine, (a32, b32), axis=1)
+    return bh.astype(b.dtype), bh[:, -1]
+
+
+def rglru(x: jnp.ndarray, r_gate: jnp.ndarray, i_gate: jnp.ndarray,
+          a_param: jnp.ndarray, initial: Optional[jnp.ndarray] = None,
+          c: float = 8.0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The RG-LRU: log a_t = −c·softplus(Λ)·r_t;
+       h_t = a_t h_{t-1} + sqrt(1−a_t²)·(i_t ⊙ x_t).
+
+    x, r_gate, i_gate: (b, l, w); a_param Λ: (w,).  Returns (h, h_last)."""
+    f32 = jnp.float32
+    log_a = -c * jax.nn.softplus(a_param.astype(f32))[None, None, :] * r_gate.astype(f32)
+    a = jnp.exp(log_a)
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i_gate.astype(f32) * x.astype(f32))
+    h, h_last = linear_recurrence(a.astype(f32), gated, initial=initial)
+    return h.astype(x.dtype), h_last
+
+
+def rglru_step(h: jnp.ndarray, x_t: jnp.ndarray, r_t: jnp.ndarray,
+               i_t: jnp.ndarray, a_param: jnp.ndarray, c: float = 8.0,
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single decode step: h (b, w); x_t/r_t/i_t (b, w)."""
+    f32 = jnp.float32
+    log_a = -c * jax.nn.softplus(a_param.astype(f32))[None, :] * r_t.astype(f32)
+    a = jnp.exp(log_a)
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i_t.astype(f32) * x_t.astype(f32))
+    new = a * h.astype(f32) + gated
+    return new.astype(x_t.dtype), new

@@ -1,0 +1,125 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel.
+
+Grid: (batch, heads, chunks) with the CHUNK axis innermost — the inter-chunk
+state (head_dim × d_state, f32) carries across chunks in VMEM scratch, so
+the sequential recurrence never leaves the chip.  Within a chunk, the
+intra-chunk quadratic term runs on the MXU: (cs × ds)·(ds × cs) score block,
+decay-masked, times the (cs × hd) inputs — all dims 128-aligned at the
+production chunk size 256 / d_state 128 / head_dim 64.
+
+B/C blocks are fetched at GROUP granularity through the index map
+(ih // heads_per_group) — no head broadcast is ever materialized in HBM.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segsum(dA: jnp.ndarray) -> jnp.ndarray:
+    """(cs,) -> (cs, cs): sum_{i=s+1..m} dA_i below/on diagonal, -inf above."""
+    cs = dA.shape[0]
+    c = jnp.cumsum(dA)
+    d = c[:, None] - c[None, :]
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, init_ref,
+            y_ref, fin_ref, state_ref, *, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = init_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)               # (cs, hd)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)                # (cs,)
+    B = B_ref[0, :, 0, :].astype(jnp.float32)               # (cs, ds)
+    C = C_ref[0, :, 0, :].astype(jnp.float32)               # (cs, ds)
+    A = A_ref[0].astype(jnp.float32)                        # scalar
+
+    dA = dt * A
+    a_cum = jnp.cumsum(dA)                                  # (cs,)
+    xdt = x * dt[:, None]
+
+    # intra-chunk quadratic part (MXU)
+    L = jnp.exp(_segsum(dA))                                # (cs, cs)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    scores = cb * L
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from the carried state
+    carry = state_ref[...]                                  # (hd, ds)
+    y += jax.lax.dot_general(C, carry, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32
+                             ) * jnp.exp(a_cum)[:, None]
+
+    y_ref[...] = y[None, :, None, :].astype(y_ref.dtype)
+
+    # state update: decay old state through the chunk, add this chunk's mass
+    decay = jnp.exp(a_cum[-1] - a_cum)                      # (cs,)
+    add = jax.lax.dot_general(xdt * decay[:, None], B,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)   # (hd, ds)
+    state_ref[...] = carry * jnp.exp(a_cum[-1]) + add
+
+    @pl.when(ic == nc - 1)
+    def _fin():
+        fin_ref[...] = state_ref[...][None, None]
+
+
+def ssd_scan_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                    B: jnp.ndarray, C: jnp.ndarray, chunk: int,
+                    initial_state: Optional[jnp.ndarray] = None,
+                    interpret: bool = False,
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Same contract as ref.ssd_chunked (B/C at group granularity)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    hg = h // g
+    l_orig = l
+    if l % chunk:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l += pad
+    nc = l // chunk
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+            else initial_state.astype(jnp.float32))
+
+    grid = (b, h, nc)
+    y, fin = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda ib, ih, ic, hg=hg: (ib, ic, ih // hg, 0)),
+            pl.BlockSpec((1, chunk, 1, n),
+                         lambda ib, ih, ic, hg=hg: (ib, ic, ih // hg, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt.astype(jnp.float32), A.astype(jnp.float32), B, C, init)
+    return y[:, :l_orig], fin

@@ -1,0 +1,28 @@
+"""Public SSD-scan op: dispatches Pallas kernel vs jnp reference."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pallas_mode
+from repro.kernels.ssd_scan import ref
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+             C: jnp.ndarray, chunk: int,
+             initial_state: Optional[jnp.ndarray] = None,
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mode = pallas_mode()
+    if mode in ("on", "interpret"):
+        from repro.kernels.ssd_scan import kernel
+        return kernel.ssd_scan_pallas(x, dt, A, B, C, chunk,
+                                      initial_state=initial_state,
+                                      interpret=(mode == "interpret"))
+    return ref.ssd_chunked(x, dt, A, B, C, chunk, initial_state=initial_state)
+
+
+ssd_step = jax.jit(ref.ssd_step)

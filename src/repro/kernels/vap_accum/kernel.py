@@ -1,0 +1,60 @@
+"""Fused VAP accumulate-and-bound Pallas kernel.
+
+One HBM pass computes  p' = p + u,  δ' = δ + u,  and the per-block ‖δ'‖∞
+(reduced to a scalar by the wrapper).  The VAP/CVAP trigger runs this over
+every parameter every step, so fusing the three reads is the paper-technique
+hot-spot (DESIGN.md §7).
+
+Tiling: the flattened parameter is padded to (rows, LANES) with rows a
+multiple of SUBLANES; each grid step owns an (8, 1024) VMEM tile —
+8 sublanes × 1024 lanes = 8 f32 vregs per operand, comfortably within VMEM
+at 3 inputs + 2 outputs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SUBLANES = 8
+LANES = 1024
+TILE = SUBLANES * LANES
+
+
+def _kernel(p_ref, d_ref, u_ref, po_ref, do_ref, m_ref):
+    u = u_ref[...]
+    nd = d_ref[...] + u
+    po_ref[...] = p_ref[...] + u
+    do_ref[...] = nd
+    m_ref[0, 0] = jnp.max(jnp.abs(nd.astype(jnp.float32)))
+
+
+def vap_accum_pallas(params: jnp.ndarray, delta: jnp.ndarray,
+                     update: jnp.ndarray, interpret: bool = False,
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    shape, dtype = params.shape, params.dtype
+    n = params.size
+    pad = (-n) % TILE
+    flat = [jnp.pad(x.reshape(-1), (0, pad)) for x in (params, delta, update)]
+    rows = (n + pad) // LANES
+    p2, d2, u2 = (x.reshape(rows, LANES) for x in flat)
+    nblk = rows // SUBLANES
+
+    tile = pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))
+    out_p, out_d, out_m = pl.pallas_call(
+        _kernel,
+        grid=(nblk,),
+        in_specs=[tile, tile, tile],
+        out_specs=[tile, tile, pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANES), dtype),
+            jax.ShapeDtypeStruct((rows, LANES), dtype),
+            jax.ShapeDtypeStruct((nblk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(p2, d2, u2)
+    new_p = out_p.reshape(-1)[:n].reshape(shape)
+    new_d = out_d.reshape(-1)[:n].reshape(shape)
+    return new_p, new_d, jnp.max(out_m)

@@ -1,0 +1,40 @@
+"""Public fused VAP accumulate op: dispatches Pallas kernel vs reference."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import pallas_mode
+from repro.kernels.vap_accum import ref
+
+PyTree = Any
+
+
+@jax.jit
+def vap_accum(params: jnp.ndarray, delta: jnp.ndarray, update: jnp.ndarray,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    mode = pallas_mode()
+    if mode in ("on", "interpret"):
+        from repro.kernels.vap_accum import kernel
+        return kernel.vap_accum_pallas(params, delta, update,
+                                       interpret=(mode == "interpret"))
+    return ref.vap_accum(params, delta, update)
+
+
+def vap_accum_tree(params: PyTree, delta: PyTree, update: PyTree,
+                   ) -> Tuple[PyTree, PyTree, jnp.ndarray]:
+    """Fused pass over a whole pytree; returns the global ‖δ‖∞."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_d = jax.tree.leaves(delta)
+    flat_u = jax.tree.leaves(update)
+    out_p, out_d, maxes = [], [], []
+    for p, d, u in zip(flat_p, flat_d, flat_u):
+        np_, nd_, m_ = vap_accum(p, d, u)
+        out_p.append(np_)
+        out_d.append(nd_)
+        maxes.append(m_)
+    gmax = jnp.max(jnp.stack(maxes)) if maxes else jnp.zeros((), jnp.float32)
+    return (jax.tree.unflatten(treedef, out_p),
+            jax.tree.unflatten(treedef, out_d), gmax)

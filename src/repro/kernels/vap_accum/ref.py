@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused VAP accumulate-and-bound pass.
+
+The VAP/CVAP trigger must, every step and for every parameter:
+  params ← params + u;  δ ← δ + u;  m = ‖δ+u‖∞
+A naive implementation reads each tensor three times; the kernel fuses the
+three into one HBM pass (this is the paper-technique hot-spot: the value
+bound is priced on every parameter touch).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def vap_accum(params: jnp.ndarray, delta: jnp.ndarray, update: jnp.ndarray,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (params + u, delta + u, max|delta + u| as f32 scalar)."""
+    new_p = params + update
+    new_d = delta + update
+    m = jnp.max(jnp.abs(new_d)).astype(jnp.float32)
+    return new_p, new_d, m

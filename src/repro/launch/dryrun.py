@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+mesh, record memory/cost/collective analysis for the roofline.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # 40 combos
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Results are cached incrementally in results/dryrun/<arch>__<shape>__<mesh>.json
+(delete a file to redo it).  Each record holds:
+  * memory_analysis  — per-device argument/output/temp/peak bytes (proves fit)
+  * cost_analysis    — HLO FLOPs + bytes accessed (roofline compute/memory)
+  * collectives      — per-op-kind byte totals parsed from the compiled HLO
+                       (roofline collective term; cost_analysis lacks these)
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCHS, ConsistencySpec, TrainConfig, get_config,
+                           get_shape)
+from repro.configs.shapes import INPUT_SHAPES
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as S
+from repro.launch import steps
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+                "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(txt: str) -> int:
+    """Total bytes of every typed shape literal in an HLO op line."""
+    total = 0
+    for m in _SHAPE_RE.finditer(txt):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum OUTPUT shape bytes of every collective op, by kind (per device)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match "%name = <shape(s)> <kind>(" — the op kind right before '('
+        m = re.search(r"=\s+(.+?)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\(", ls)
+        if not m:
+            continue
+        kind, phase = m.group(2), m.group(3)
+        if phase == "-done":
+            continue           # started ops already counted
+        out[kind] += _shape_bytes(m.group(1))
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    d = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            d[k] = int(v)
+    d["peak_bytes_estimate"] = (
+        d.get("argument_size_in_bytes", 0) + d.get("temp_size_in_bytes", 0)
+        + max(0, d.get("output_size_in_bytes", 0) - d.get("alias_size_in_bytes", 0)))
+    return d
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    out = {}
+    for k, v in ca.items():
+        if k in ("flops", "bytes accessed", "transcendentals",
+                 "optimal_seconds") or k.startswith("bytes accessed"):
+            out[k] = float(v)
+    return out
+
+
+def layer_counts(cfg, long_ctx: bool):
+    """(n_layers for a 1-unit variant, n_layers for a 0-unit variant,
+    n_units of the full config)."""
+    from repro.models import model as M
+    metas = M.layer_metas(cfg, long_ctx)
+    prefix, unit, n_units, tail = M.group_layers(cfg, metas)
+    start, period, tail_len = len(prefix), len(unit), len(tail)
+    return start + period + tail_len, start + tail_len, n_units
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, consistency: str,
+                    staleness: int, vthr: float, unroll: bool = False,
+                    n_layers_override=None, state_dtype: str = "float32"):
+    """Returns (fn, example_args) ready for jit(...).lower(*args)."""
+    cfg = get_config(arch)
+    if n_layers_override is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers_override)
+    shape = get_shape(shape_name)
+    long_ctx = shape_name == "long_500k"
+    dp_total = mesh_lib.dp_size(mesh)
+    tp = mesh_lib.tp_size(mesh)
+
+    def sds_with(specs_tree, abstract_tree_):
+        sh = S.shardings(specs_tree, mesh)
+        return jax.tree.map(
+            lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+            abstract_tree_, sh)
+
+    if shape.mode == "train":
+        tcfg = TrainConfig(
+            arch=arch, shape=shape_name, state_dtype=state_dtype,
+            consistency=ConsistencySpec(model=consistency, staleness=staleness,
+                                        value_bound=vthr))
+        # donation ON: the deployable configuration aliases state in/out,
+        # which is what the memory_analysis should reflect
+        fn = steps.make_train_step(cfg, tcfg, mesh, donate=True, unroll=unroll)
+        state_abs = S.abstract_train_state(cfg, tcfg, tp, dp_total)
+        state_spec = S.train_state_pspecs(cfg, tcfg, tp)
+        batch_abs, batch_spec = S.train_batch_specs(cfg, shape, dp_total)
+        args = (sds_with(state_spec, state_abs), sds_with(batch_spec, batch_abs))
+        return fn, args
+
+    from repro.models import model as M
+    from repro.models.common import pspec_tree
+    defs = M.model_defs(cfg, tp, long_ctx)
+    param_abs = jax.tree.map(lambda d: d.abstract(), defs,
+                             is_leaf=lambda x: hasattr(x, "abstract"))
+    param_spec = pspec_tree(defs)
+
+    if shape.mode == "prefill":
+        fn = steps.make_prefill_step(cfg, mesh, shape, long_ctx, unroll=unroll)
+        batch_abs, batch_spec = S.prefill_batch_specs(cfg, shape, dp_total)
+        args = (sds_with(param_spec, param_abs), sds_with(batch_spec, batch_abs))
+        return fn, args
+
+    # decode
+    fn = steps.make_serve_step(cfg, mesh, shape, long_ctx, unroll=unroll)
+    batch_abs, batch_spec = S.decode_batch_specs(cfg, shape, dp_total)
+    cache_abs = S.global_cache_abstract(cfg, shape, dp_total, tp, long_ctx)
+    cache_spec = S.model_cache_pspecs(cfg, shape.global_batch, dp_total, long_ctx)
+    args = (sds_with(param_spec, param_abs),
+            sds_with(cache_spec, cache_abs),
+            sds_with(batch_spec, batch_abs))
+    return fn, args
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, consistency: str,
+            staleness: int, vthr: float, save: bool = True,
+            state_dtype: str = "float32") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    sfx = "" if state_dtype == "float32" else f"__{state_dtype}"
+    tag = f"{arch}__{shape_name}__{mesh_name}__{consistency}{sfx}"
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, tag + ".json")
+    if save and os.path.exists(path):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            print(f"[cached] {tag}")
+            return rec
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "consistency": consistency, "staleness": staleness, "vthr": vthr,
+           "ok": False}
+    t0 = time.time()
+    try:
+        # Pass A — full model, scan-over-layers (the deployable program):
+        # memory analysis + compile-success proof.
+        fn, args = build_lowerable(arch, shape_name, mesh, consistency,
+                                   staleness, vthr, state_dtype=state_dtype)
+        lowered = fn.lower(*args)
+        rec["lower_seconds"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_seconds"] = time.time() - t1
+        rec["memory"] = _mem_dict(compiled)
+        rec["cost_scan_raw"] = _cost_dict(compiled)
+
+        # Passes B/C — 1-unit and 0-unit variants, UNROLLED (cost_analysis
+        # does not count while-loop bodies at all, so layer work must appear
+        # outside any loop).  Per-layer terms are recovered by differencing
+        # and scaled by n_units — cost terms are exactly linear in the layer
+        # count (sync/optimizer collectives scale with the parameter count,
+        # which the difference captures).
+        long_ctx = shape_name == "long_500k"
+        cfg_full = get_config(arch)
+        n1, n0, n_units = layer_counts(cfg_full, long_ctx)
+        rec["n_units"] = n_units
+        t2 = time.time()
+        fn1, args1 = build_lowerable(arch, shape_name, mesh, consistency,
+                                     staleness, vthr, unroll=True,
+                                     n_layers_override=n1,
+                                     state_dtype=state_dtype)
+        comp1 = fn1.lower(*args1).compile()
+        cost1, coll1 = _cost_dict(comp1), collective_bytes(comp1.as_text())
+        fn0, args0 = build_lowerable(arch, shape_name, mesh, consistency,
+                                     staleness, vthr, unroll=True,
+                                     n_layers_override=n0,
+                                     state_dtype=state_dtype)
+        comp0 = fn0.lower(*args0).compile()
+        cost0, coll0 = _cost_dict(comp0), collective_bytes(comp0.as_text())
+        rec["compile_seconds_units"] = time.time() - t2
+
+        def scale(v0, v1):
+            return max(0.0, v0 + n_units * (v1 - v0))
+
+        rec["cost"] = {k: scale(cost0.get(k, 0.0), cost1.get(k, 0.0))
+                       for k in set(cost0) | set(cost1)}
+        rec["collectives"] = {
+            "bytes": {k: int(scale(coll0["bytes"].get(k, 0),
+                                   coll1["bytes"].get(k, 0)))
+                      for k in coll1["bytes"]},
+            "counts": {k: int(scale(coll0["counts"].get(k, 0),
+                                    coll1["counts"].get(k, 0)))
+                       for k in coll1["counts"]},
+        }
+        rec["collectives"]["total_bytes"] = sum(rec["collectives"]["bytes"].values())
+        rec["ok"] = True
+        print(f"[ok] {tag}: compile {rec['compile_seconds']:.1f}s "
+              f"peak/device={rec['memory'].get('peak_bytes_estimate', 0)/2**30:.2f}GiB "
+              f"flops={rec['cost'].get('flops', 0):.3e} "
+              f"coll={rec['collectives']['total_bytes']/2**20:.1f}MiB")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {tag}: {rec['error']}")
+    if save:
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch × shape) combination")
+    ap.add_argument("--consistency", default="cvap",
+                    choices=["bsp", "ssp", "cap", "vap", "cvap"])
+    ap.add_argument("--staleness", type=int, default=3)
+    ap.add_argument("--vthr", type=float, default=0.05)
+    ap.add_argument("--state-dtype", default="float32",
+                    choices=["float32", "bfloat16"])
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in sorted(ARCHS):
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    n_ok = 0
+    for a, s in combos:
+        rec = run_one(a, s, args.multi_pod, args.consistency, args.staleness,
+                      args.vthr, state_dtype=args.state_dtype)
+        n_ok += bool(rec.get("ok"))
+    print(f"\n{n_ok}/{len(combos)} combinations compiled successfully")
+    if n_ok < len(combos):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production meshes (DESIGN.md §6).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  The dry-run sets XLA_FLAGS --xla_force_host_platform_device_count
+*before* any jax import (see dryrun.py) to obtain 256/512 host devices.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 chips per pod; 2 pods when multi_pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes_of(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes_of(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

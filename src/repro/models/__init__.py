@@ -1,0 +1,10 @@
+from repro.models import attention, common, model, moe, recurrent
+from repro.models.common import ShardCtx
+from repro.models.model import (decode_step, forward, lm_loss, model_cache_defs,
+                                model_defs, prefill, sample_greedy)
+
+__all__ = [
+    "ShardCtx", "attention", "common", "decode_step", "forward", "lm_loss",
+    "model", "model_cache_defs", "model_defs", "moe", "prefill", "recurrent",
+    "sample_greedy",
+]

@@ -1,0 +1,332 @@
+"""Recurrent mixers: RG-LRU (RecurrentGemma) and Mamba-2 SSD blocks.
+
+Both support a full-sequence mode (train/prefill — scan or chunked SSD) and
+a single-token decode mode carrying a recurrent state "cache":
+  RG-LRU : {h (b, w_loc), conv (b, cw-1, w_loc)}
+  Mamba2 : {h (b, nh, hd, ds), conv (b, cw-1, w + 2·g·ds)}
+
+Sharding: RG-LRU width shards over ``model`` (the recurrence is element-wise
+diagonal, so the scan needs no cross-device communication); gates are
+block-diagonal with blocks aligned to the shard.  Mamba2-130m is tiny and
+uses the replicated strategy (DESIGN.md §6) — its mixer sees no model axis.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamDef, ShardCtx, activation
+
+RGLRU_NUM_BLOCKS = 16     # gate block-diagonal blocks (divides widths & tp)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+
+def rglru_defs(cfg: ModelConfig, tp: int) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    r = cfg.recurrent
+    w = r.width
+    nb = RGLRU_NUM_BLOCKS
+    blk = w // nb
+    shard = cfg.tp_strategy == "head"
+    sh1 = (None, "model") if shard else (None, None)
+    sh0 = ("model", None) if shard else (None, None)
+    shb = ("model", None, None) if shard else (None, None, None)
+    shv = ("model",) if shard else (None,)
+    return {
+        "w_x": ParamDef((d, w), sh1),
+        "w_gate": ParamDef((d, w), sh1),
+        "conv_w": ParamDef((r.conv_width, w), (None, "model") if shard else (None, None),
+                           scale=0.3),
+        "conv_b": ParamDef((w,), shv, init="zeros"),
+        "w_a": ParamDef((nb, blk, blk), shb),
+        "b_a": ParamDef((w,), shv, init="zeros"),
+        "w_i": ParamDef((nb, blk, blk), shb),
+        "b_i": ParamDef((w,), shv, init="zeros"),
+        "a_param": ParamDef((w,), shv, init="ones", scale=1.0),
+        "w_out": ParamDef((w, d), sh0),
+    }
+
+
+def _block_linear(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., nb_loc*blk); w: (nb_loc, blk, blk); b: (nb_loc*blk,)."""
+    nb, blk = w.shape[0], w.shape[1]
+    xs = x.reshape(*x.shape[:-1], nb, blk)
+    y = jnp.einsum("...nw,nwv->...nv", xs, w)
+    return y.reshape(*x.shape[:-1], nb * blk) + b
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv. x: (b, l, c); w: (cw, c); state: (b, cw-1, c)."""
+    cw = w.shape[0]
+    pad = (jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+           if state is None else state.astype(x.dtype))
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(cw))
+    return out + b
+
+
+def rglru_fwd(cfg: ModelConfig, ctx: ShardCtx, p: Dict, x: jnp.ndarray, *,
+              cache: Optional[Dict] = None, pos: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (b, s_loc, d) seq-sharded.  Full mode gathers the sequence (the
+    recurrence needs temporal order), computes the width shard, scatters
+    back.  Decode mode is a single step against the state cache."""
+    from repro.kernels.rglru_scan import ops as rg_ops
+
+    shard = cfg.tp_strategy == "head" and ctx.model_axis is not None
+    if pos is None:
+        xg = ctx.gather_seq(x) if shard else x               # (b, s, d)
+        gate = activation("gelu", xg @ p["w_gate"])          # (b, s, w_loc)
+        xb = xg @ p["w_x"]
+        xb = _causal_conv(xb, p["conv_w"], p["conv_b"])
+        r_g = jax.nn.sigmoid(_block_linear(xb, p["w_a"], p["b_a"]))
+        i_g = jax.nn.sigmoid(_block_linear(xb, p["w_i"], p["b_i"]))
+        h, h_last = rg_ops.rglru(xb, r_g, i_g, p["a_param"])
+        y = (gate * h) @ p["w_out"]                          # partial if sharded
+        y = ctx.scatter_seq(y) if shard else y
+        new_cache = None
+        if cache is not None:
+            cw = p["conv_w"].shape[0]
+            # conv state = last cw-1 raw inputs (pre-conv xb inputs)
+            raw = (xg @ p["w_x"])[:, -(cw - 1):]
+            new_cache = {"h": h_last.astype(cache["h"].dtype),
+                         "conv": raw.astype(cache["conv"].dtype)}
+        return y, new_cache
+
+    # ---- decode ----
+    gate = activation("gelu", x @ p["w_gate"])               # (b, 1, w_loc)
+    raw = x @ p["w_x"]                                       # (b, 1, w_loc)
+    conv_in = jnp.concatenate([cache["conv"].astype(raw.dtype), raw], axis=1)
+    cw = p["conv_w"].shape[0]
+    xb = jnp.einsum("btc,tc->bc", conv_in[:, -cw:], p["conv_w"]) + p["conv_b"]
+    r_g = jax.nn.sigmoid(_block_linear(xb, p["w_a"], p["b_a"]))
+    i_g = jax.nn.sigmoid(_block_linear(xb, p["w_i"], p["b_i"]))
+    _, h_new = rg_ops.rglru_step(cache["h"], xb, r_g, i_g, p["a_param"])
+    y = (gate[:, 0] * h_new.astype(gate.dtype)) @ p["w_out"]
+    if shard:
+        y = ctx.psum_model(y)
+    new_cache = {"h": h_new.astype(cache["h"].dtype),
+                 "conv": conv_in[:, -(cw - 1):].astype(cache["conv"].dtype)}
+    return y[:, None, :], new_cache
+
+
+def rglru_cache_defs(cfg: ModelConfig, tp: int, batch_local: int,
+                     ) -> Dict[str, jax.ShapeDtypeStruct]:
+    r = cfg.recurrent
+    w_loc = r.width // tp if cfg.tp_strategy == "head" else r.width
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "h": jax.ShapeDtypeStruct((batch_local, w_loc), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch_local, r.conv_width - 1, w_loc), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba2_defs(cfg: ModelConfig, tp: int) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    r = cfg.recurrent
+    w = r.width
+    nh = w // r.head_dim
+    gs = r.n_groups * r.d_state
+    conv_dim = w + 2 * gs
+    return {
+        # in_proj order: [z (w) | x (w) | B (gs) | C (gs) | dt (nh)]
+        "w_in": ParamDef((d, 2 * w + 2 * gs + nh), (None, None)),
+        "conv_w": ParamDef((r.conv_width, conv_dim), (None, None), scale=0.3),
+        "conv_b": ParamDef((conv_dim,), (None,), init="zeros"),
+        "A_log": ParamDef((nh,), (None,), init="ones"),
+        "D": ParamDef((nh,), (None,), init="ones"),
+        "dt_bias": ParamDef((nh,), (None,), init="zeros"),
+        "norm": ParamDef((w,), (None,), init="ones"),
+        "w_out": ParamDef((w, d), (None, None)),
+    }
+
+
+def _mamba_split(cfg, h):
+    r = cfg.recurrent
+    w = r.width
+    gs = r.n_groups * r.d_state
+    nh = w // r.head_dim
+    z = h[..., :w]
+    xBC = h[..., w:w + w + 2 * gs]
+    dt = h[..., w + w + 2 * gs:]
+    return z, xBC, dt, w, gs, nh
+
+
+def mamba2_fwd(cfg: ModelConfig, ctx: ShardCtx, p: Dict, x: jnp.ndarray, *,
+               cache: Optional[Dict] = None, pos: Optional[jnp.ndarray] = None,
+               ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """x: (b, s, d) (replicated strategy: full sequence on every device) or
+    (b, s/tp, d) under the sequence-parallel "seq_ssm" strategy."""
+    from repro.kernels.ssd_scan import ops as ssd_ops
+
+    if (cfg.tp_strategy == "seq_ssm" and ctx.model_axis is not None
+            and pos is None):
+        return _mamba2_fwd_seqpar(cfg, ctx, p, x, cache=cache)
+
+    r = cfg.recurrent
+    hd, ds, ng = r.head_dim, r.d_state, r.n_groups
+    proj = x @ p["w_in"]
+    z, xBC, dt_raw, w, gs, nh = _mamba_split(cfg, proj)
+    rep = nh // ng
+
+    if pos is None:
+        b, s, _ = x.shape
+        xBC = activation("silu", _causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        xs = xBC[..., :w].reshape(b, s, nh, hd)
+        B = xBC[..., w:w + gs].reshape(b, s, ng, ds)         # group granularity —
+        C = xBC[..., w + gs:].reshape(b, s, ng, ds)          # ssd_chunked broadcasts
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                             + p["dt_bias"].astype(jnp.float32))
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        y, state = ssd_ops.ssd_scan(xs, dt, A, B, C, chunk=min(r.chunk_size, s))
+        y = y + xs * p["D"].astype(y.dtype)[None, None, :, None]
+        y = y.reshape(b, s, w)
+        # gated RMSNorm (Mamba-2)
+        y = _gated_rmsnorm(y, z, p["norm"])
+        out = y @ p["w_out"]
+        new_cache = None
+        if cache is not None:
+            cw = p["conv_w"].shape[0]
+            new_cache = {"h": state.astype(cache["h"].dtype),
+                         "conv": xBC_raw_tail(proj, cfg, cw).astype(cache["conv"].dtype)}
+        return out, new_cache
+
+    # ---- decode: single token ----
+    b = x.shape[0]
+    raw = xBC[:, 0]                                          # (b, conv_dim)
+    conv_in = jnp.concatenate([cache["conv"].astype(raw.dtype),
+                               raw[:, None]], axis=1)
+    cw = p["conv_w"].shape[0]
+    xBC1 = jnp.einsum("btc,tc->bc", conv_in[:, -cw:], p["conv_w"]) + p["conv_b"]
+    xBC1 = activation("silu", xBC1)
+    xs = xBC1[:, :w].reshape(b, nh, hd)
+    B = jnp.repeat(xBC1[:, w:w + gs].reshape(b, ng, ds), rep, axis=1)
+    C = jnp.repeat(xBC1[:, w + gs:].reshape(b, ng, ds), rep, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, h_new = ssd_ops.ssd_step(cache["h"].astype(jnp.float32), xs, dt, A, B, C)
+    y = y + xs * p["D"].astype(y.dtype)[None, :, None]
+    y = y.reshape(b, 1, w)
+    y = _gated_rmsnorm(y, z, p["norm"])
+    out = y @ p["w_out"]
+    new_cache = {"h": h_new.astype(cache["h"].dtype),
+                 "conv": conv_in[:, -(cw - 1):].astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def _mamba2_fwd_seqpar(cfg: ModelConfig, ctx: ShardCtx, p: Dict,
+                       x: jnp.ndarray, *, cache=None):
+    """Sequence-parallel SSD (beyond-paper, EXPERIMENTS.md §Perf pair 1).
+
+    The residual is sequence-sharded (b, s/tp, d) over the model axis, so
+    each device runs the SSD over its own sequence slice only (1/tp of the
+    replicated strategy's FLOPs and HBM traffic).  Cross-device causality is
+    restored with two tiny collectives:
+      * the causal-conv left halo — ppermute of (b, cw-1, conv_dim);
+      * the inter-slice SSD state — each device scans from a zero state,
+        all-gathers its (outgoing state S_j, slice decay logD_j), forms the
+        true incoming state by a prefix combine (the same associativity the
+        chunked scan uses), and adds the decayed correction C_t·S_in.
+    """
+    from jax import lax
+    from repro.kernels.ssd_scan import ops as ssd_ops
+
+    if cache is not None:
+        raise NotImplementedError("seq_ssm is a training-path optimization")
+    r = cfg.recurrent
+    hd, ds, ng = r.head_dim, r.d_state, r.n_groups
+    f32 = jnp.float32
+    proj = x @ p["w_in"]
+    z, xBC, dt_raw, w, gs, nh = _mamba_split(cfg, proj)
+    b, s_loc, _ = x.shape
+    tp = ctx.tp
+    idx = ctx.index()
+
+    # causal-conv halo from the left neighbour (device m-1)
+    cw = p["conv_w"].shape[0]
+    tail = xBC[:, -(cw - 1):, :]
+    perm = [(i, (i + 1) % tp) for i in range(tp)]
+    halo = lax.ppermute(tail, ctx.model_axis, perm)
+    halo = jnp.where(idx == 0, jnp.zeros_like(halo), halo)
+    xBC = activation("silu", _causal_conv(xBC, p["conv_w"], p["conv_b"],
+                                          state=halo))
+
+    xs = xBC[..., :w].reshape(b, s_loc, nh, hd)
+    B = xBC[..., w:w + gs].reshape(b, s_loc, ng, ds)
+    C = xBC[..., w + gs:].reshape(b, s_loc, ng, ds)
+    dt = jax.nn.softplus(dt_raw.astype(f32) + p["dt_bias"].astype(f32))
+    A = -jnp.exp(p["A_log"].astype(f32))
+
+    # local scan from zero state
+    y0, S_out = ssd_ops.ssd_scan(xs, dt, A, B, C,
+                                 chunk=min(r.chunk_size, s_loc))
+    logD = jnp.sum(dt * A[None, None, :], axis=1)            # (b, nh) f32
+
+    # prefix-combine the slice states across devices (tiny: tp×(b,nh,hd,ds))
+    S_all = lax.all_gather(S_out, ctx.model_axis)            # (tp, b, nh, p, n)
+    logD_all = lax.all_gather(logD, ctx.model_axis)          # (tp, b, nh)
+    cum = jnp.cumsum(logD_all, axis=0)                       # inclusive
+    # S_in = sum_{j<m} exp(cum[m-1] - cum[j]) * S_j   (decay through (j, m))
+    j_idx = jnp.arange(tp)
+    cum_m1 = jnp.where(idx > 0, cum[jnp.maximum(idx - 1, 0)], 0.0)  # (b, nh)
+    # mask BEFORE exp: exp of a large positive (j >= m) would overflow and
+    # poison gradients through the where
+    expo = jnp.where((j_idx < idx)[:, None, None], cum_m1[None] - cum, -1e30)
+    wgt = jnp.exp(expo)                                      # (tp, b, nh)
+    S_in = jnp.einsum("jbh,jbhpn->bhpn", wgt, S_all)         # f32
+
+    # correction: the incoming state decays to position t by exp(A_cum[t])
+    A_cum = jnp.cumsum(dt * A[None, None, :], axis=1)        # (b, s_loc, nh)
+    hg = nh // ng
+    y_corr = jnp.einsum("bsgn,bghpn->bsghp", C.astype(f32),
+                        S_in.reshape(b, ng, hg, hd, ds)
+                        ).reshape(b, s_loc, nh, hd)
+    y_corr = y_corr * jnp.exp(A_cum)[..., None]
+    y = y0.astype(f32) + y_corr
+    y = y + xs.astype(f32) * p["D"].astype(f32)[None, None, :, None]
+    y = y.reshape(b, s_loc, w).astype(x.dtype)
+    y = _gated_rmsnorm(y, z, p["norm"])
+    return y @ p["w_out"], None
+
+
+def xBC_raw_tail(proj: jnp.ndarray, cfg: ModelConfig, cw: int) -> jnp.ndarray:
+    """Last cw-1 pre-conv xBC inputs (the decode conv state)."""
+    r = cfg.recurrent
+    w = r.width
+    gs = r.n_groups * r.d_state
+    xBC = proj[..., w:w + w + 2 * gs]
+    return xBC[:, -(cw - 1):]
+
+
+def _gated_rmsnorm(y: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    f32 = jnp.float32
+    g = y.astype(f32) * jax.nn.silu(z.astype(f32))
+    var = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(var + 1e-6) * scale.astype(f32)).astype(y.dtype)
+
+
+def mamba2_cache_defs(cfg: ModelConfig, tp: int, batch_local: int,
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    r = cfg.recurrent
+    w = r.width
+    nh = w // r.head_dim
+    gs = r.n_groups * r.d_state
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "h": jax.ShapeDtypeStruct((batch_local, nh, r.head_dim, r.d_state), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch_local, r.conv_width - 1, w + 2 * gs), dt),
+    }

@@ -1,0 +1,85 @@
+"""Optimizers from scratch (no optax): SGD, momentum, Adam.
+
+Each optimizer produces an *update* (the paper's ``u``) from gradients; the
+consistency layer (repro.core.sync) applies it locally and decides when to
+synchronize.  Optimizer state is per-replica, like the parameters — the
+paper's asynchronous workers each run their own optimizer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    mu: PyTree                    # first moment (momentum/adam) or empty
+    nu: PyTree                    # second moment (adam) or empty
+    count: jnp.ndarray            # i32 step counter
+
+
+def init_opt_state(params: PyTree, kind: str, dtype=None) -> OptState:
+    """dtype: storage dtype for the moments (bf16 halves optimizer HBM)."""
+    zeros = lambda: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), params)
+    empty = jax.tree.map(lambda x: jnp.zeros((), x.dtype), params)
+    if kind == "sgd":
+        return OptState(mu=empty, nu=empty, count=jnp.zeros((), jnp.int32))
+    if kind == "momentum":
+        return OptState(mu=zeros(), nu=empty, count=jnp.zeros((), jnp.int32))
+    if kind == "adam":
+        return OptState(mu=zeros(), nu=zeros(), count=jnp.zeros((), jnp.int32))
+    raise ValueError(f"unknown optimizer {kind!r}")
+
+
+def sgd(grads: PyTree, state: OptState, lr, **_) -> Tuple[PyTree, OptState]:
+    upd = jax.tree.map(lambda g: -lr * g, grads)
+    return upd, dataclasses.replace(state, count=state.count + 1)
+
+
+def momentum(grads: PyTree, state: OptState, lr, beta: float = 0.9,
+             **_) -> Tuple[PyTree, OptState]:
+    mu = jax.tree.map(lambda m, g: beta * m + g, state.mu, grads)
+    upd = jax.tree.map(lambda m: -lr * m, mu)
+    return upd, dataclasses.replace(state, mu=mu, count=state.count + 1)
+
+
+def adam(grads: PyTree, state: OptState, lr, b1: float = 0.9,
+         b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, params: PyTree = None,
+         ) -> Tuple[PyTree, OptState]:
+    cnt = state.count + 1
+    t = cnt.astype(jnp.float32)
+    # compute in the grad dtype (f32), store back in the moment dtype
+    mu = jax.tree.map(
+        lambda m, g: (b1 * m.astype(g.dtype) + (1 - b1) * g).astype(m.dtype),
+        state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: (b2 * v.astype(g.dtype)
+                      + (1 - b2) * jnp.square(g)).astype(v.dtype),
+        state.nu, grads)
+    bc1 = 1 - jnp.power(b1, t)
+    bc2 = 1 - jnp.power(b2, t)
+
+    def u(m, v, p=None):
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        step = -(lr * (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps))
+        if weight_decay and p is not None:
+            step = step - lr * weight_decay * p
+        return step
+
+    if weight_decay and params is not None:
+        upd = jax.tree.map(u, mu, nu, params)
+    else:
+        upd = jax.tree.map(u, mu, nu)
+    return upd, OptState(mu=mu, nu=nu, count=cnt)
+
+
+def optimizer_update(kind: str) -> Callable:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam}[kind]

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure functions of the i32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup: int, base):
+    base_fn = base
+
+    def fn(step):
+        t = step.astype(jnp.float32)
+        scale = jnp.minimum(1.0, (t + 1.0) / max(warmup, 1))
+        return scale * base_fn(step)
+    return fn
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        return jnp.asarray(
+            lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))),
+            jnp.float32)
+    return fn
+
+
+def sqrt_decay(sigma: float):
+    """The paper's Theorem-1 step size η_t = σ/√t (t is 1-based)."""
+    def fn(step):
+        return jnp.asarray(sigma, jnp.float32) / jnp.sqrt(step.astype(jnp.float32) + 1.0)
+    return fn

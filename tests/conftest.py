@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_devices_subprocess(code: str, n_devices: int = 8,
+                           timeout: int = 600) -> str:
+    """Run `code` in a subprocess with N fake host devices.
+
+    The dry-run flag must be set before jax initializes, so multi-device
+    tests run out-of-process (the main test process keeps 1 device, per the
+    brief)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.fixture
+def devices8():
+    return lambda code, **kw: run_devices_subprocess(code, 8, **kw)

@@ -1,0 +1,89 @@
+"""Unit tests: policies and the Consistency Controller (paper §2, §4.3)."""
+import numpy as np
+import pytest
+
+from repro.configs import ConsistencySpec
+from repro.core import controller, policies
+
+
+def test_policy_constructors():
+    assert policies.bsp().staleness == 0
+    assert policies.bsp().push_at_clock_only
+    assert policies.ssp(3).staleness == 3
+    assert policies.ssp(3).push_at_clock_only
+    assert not policies.cap(3).push_at_clock_only
+    assert policies.vap(0.5).value_bounded
+    assert not policies.vap(0.5).clock_bounded
+    p = policies.cvap(2, 0.1, strong=True)
+    assert p.clock_bounded and p.value_bounded and p.strong
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        policies.Policy("nonsense")
+    with pytest.raises(ValueError):
+        policies.Policy("cap", staleness=-1)
+    with pytest.raises(ValueError):
+        policies.Policy("vap", value_bound=0.0)
+
+
+def test_from_spec():
+    p = policies.from_spec(ConsistencySpec(model="cvap", staleness=4,
+                                           value_bound=0.25))
+    assert p.kind == "cvap" and p.staleness == 4 and p.value_bound == 0.25
+    assert policies.from_spec(ConsistencySpec(model="bsp")).kind == "bsp"
+
+
+def test_clock_gate_bsp_is_barrier():
+    p = policies.bsp()
+    # worker at clock 1 must have seen every update of period 0
+    assert controller.clock_gate(p, 1, np.array([0, 0, 0]))
+    assert not controller.clock_gate(p, 1, np.array([0, -1, 0]))
+    assert controller.clock_gate(p, 0, np.array([-1, -1]))   # nothing needed yet
+
+
+def test_clock_gate_staleness_window():
+    p = policies.cap(2)
+    # worker at clock 3 needs everything stamped <= 0
+    assert controller.clock_gate(p, 3, np.array([0, 0]))
+    assert not controller.clock_gate(p, 3, np.array([-1, 0]))
+    assert controller.clock_gate(p, 2, np.array([-1, -1]))
+
+
+def test_clock_gate_vap_never_blocks():
+    p = policies.vap(0.1)
+    assert controller.clock_gate(p, 100, np.array([-1, -1]))
+
+
+def test_value_gate_blocks_and_oversize_exception():
+    p = policies.vap(1.0)
+    ok, _ = controller.value_gate(p, np.array([0.8]), np.array([0.3]))
+    assert not ok                               # 1.1 > 1.0 and accum nonzero
+    ok, _ = controller.value_gate(p, np.array([0.0]), np.array([5.0]))
+    assert ok                                   # lone oversized update admitted
+    ok, _ = controller.value_gate(p, np.array([0.5]), np.array([0.4]))
+    assert ok                                   # 0.9 <= 1.0
+
+
+def test_value_gate_elementwise():
+    p = policies.vap(1.0)
+    ok, viol = controller.value_gate(p, np.array([0.9, 0.0]),
+                                     np.array([0.2, 0.2]))
+    assert not ok and viol[0] and not viol[1]
+
+
+def test_strong_delivery_gate():
+    p = policies.vap(1.0, strong=True)
+    assert controller.strong_delivery_gate(p, np.array([0.0]), np.array([0.5]))
+    assert not controller.strong_delivery_gate(p, np.array([0.8]), np.array([0.5]))
+    # oversized update admitted when budget is free
+    assert controller.strong_delivery_gate(p, np.array([0.0]), np.array([9.0]))
+    # weak policy never gates delivery
+    pw = policies.vap(1.0, strong=False)
+    assert controller.strong_delivery_gate(pw, np.array([99.0]), np.array([1.0]))
+
+
+def test_vap_unsynced_bound():
+    p = policies.vap(0.5)
+    assert controller.vap_unsynced_bound(p, 0.1) == 0.5
+    assert controller.vap_unsynced_bound(p, 2.0) == 2.0   # max(u, v_thr)

@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import AsyncPS, NetworkModel, controller, policies, theory
+
+SET = dict(deadline=None, max_examples=25)
+
+
+# ---------------------------------------------------------------------------
+# Controller invariants
+# ---------------------------------------------------------------------------
+
+
+@given(vthr=st.floats(0.01, 10), acc=st.floats(-5, 5), delta=st.floats(-5, 5))
+@settings(**SET)
+def test_value_gate_never_lets_nonzero_accum_exceed(vthr, acc, delta):
+    p = policies.vap(vthr)
+    ok, _ = controller.value_gate(p, np.array([acc]), np.array([delta]))
+    if ok and abs(acc) > 1e-12:
+        assert abs(acc + delta) <= vthr + 1e-9
+
+
+@given(vthr=st.floats(0.01, 10), delta=st.floats(-20, 20))
+@settings(**SET)
+def test_value_gate_always_admits_from_zero(vthr, delta):
+    """A worker with an empty accumulator can always make progress — the
+    liveness half of the max(u, v_thr) bound."""
+    p = policies.vap(vthr)
+    ok, _ = controller.value_gate(p, np.zeros(1), np.array([delta]))
+    assert ok
+
+
+@given(s=st.integers(0, 5), clock=st.integers(0, 20),
+       fr=st.lists(st.integers(-1, 20), min_size=1, max_size=6))
+@settings(**SET)
+def test_clock_gate_monotone_in_frontier(s, clock, fr):
+    """If the gate passes with some frontier, it passes with any larger one."""
+    p = policies.cap(s)
+    fr = np.asarray(fr)
+    if controller.clock_gate(p, clock, fr):
+        assert controller.clock_gate(p, clock, fr + 1)
+
+
+@given(u=st.floats(0, 5), vthr=st.floats(0.01, 5), P=st.integers(2, 64))
+@settings(**SET)
+def test_strong_bound_tighter_than_weak_for_P_ge_2(u, vthr, P):
+    assert (theory.strong_vap_divergence_bound(u, vthr)
+            <= theory.weak_vap_divergence_bound(u, vthr, P) + 1e-12)
+
+
+@given(T=st.integers(1, 10_000), F=st.floats(0.1, 10), L=st.floats(0.1, 10),
+       v=st.floats(0.01, 1), P=st.integers(1, 64))
+@settings(**SET)
+def test_regret_bound_positive_and_sqrtT(T, F, L, v, P):
+    b1 = theory.theorem1_regret_bound(T, F, L, v, P)
+    b4 = theory.theorem1_regret_bound(4 * T, F, L, v, P)
+    assert b1 > 0
+    assert abs(b4 / b1 - 2.0) < 1e-6        # scales exactly as sqrt(T)
+
+
+# ---------------------------------------------------------------------------
+# Simulator: random configurations never violate the paper's bounds
+# ---------------------------------------------------------------------------
+
+
+@given(
+    P=st.integers(2, 6),
+    kind=st.sampled_from(["bsp", "ssp", "cap", "vap", "cvap"]),
+    s=st.integers(0, 3),
+    vthr=st.floats(0.05, 1.0),
+    strong=st.booleans(),
+    delay=st.floats(0.01, 1.0),
+    seed=st.integers(0, 10_000),
+)
+@settings(deadline=None, max_examples=15)
+def test_simulator_invariants_random(P, kind, s, vthr, strong, delay, seed):
+    if kind in ("bsp", "ssp", "cap"):
+        strong = False
+    pol = policies.Policy(kind, staleness=s,
+                          value_bound=vthr if kind in ("vap", "cvap") else policies.INF,
+                          strong=strong,
+                          push_at_clock_only=kind in ("bsp", "ssp"))
+    rng = np.random.default_rng(seed)
+
+    def fn(w, clock, view, r):
+        x = view.get("x")
+        return {"x": -0.1 * (x - w) + r.normal(0, 0.1, 2)}
+
+    ps = AsyncPS(P, pol, {"x": np.zeros(2)},
+                 network=NetworkModel(base_delay=delay, jitter=delay / 2,
+                                      seed=seed),
+                 seed=seed)
+    stats = ps.run(fn, 8, divergence_every=1.0)
+    assert stats.violations == []
+    if pol.clock_bounded:
+        assert stats.max_observed_staleness <= pol.staleness
+    if pol.value_bounded:
+        bound = max(stats.max_update_mag, pol.value_bound)
+        assert stats.max_unsynced_mag <= bound + 1e-9
+        if pol.strong:
+            assert stats.max_divergence <= theory.strong_vap_divergence_bound(
+                stats.max_update_mag, pol.value_bound) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Kernel refs: algebraic properties on random inputs
+# ---------------------------------------------------------------------------
+
+
+@given(b=st.integers(1, 3), l=st.integers(1, 40), w=st.integers(1, 20),
+       seed=st.integers(0, 1000))
+@settings(**SET)
+def test_linear_recurrence_decomposes(b, l, w, seed):
+    """h(a, b1 + b2) = h(a, b1) + h(a, b2) — linearity in the input."""
+    from repro.kernels.rglru_scan import ref as rr
+    rng = np.random.default_rng(seed)
+    a = np.asarray(rng.uniform(0.5, 0.99, (b, l, w)), np.float64)
+    b1 = np.asarray(rng.normal(0, 1, (b, l, w)), np.float64)
+    b2 = np.asarray(rng.normal(0, 1, (b, l, w)), np.float64)
+    import jax.numpy as jnp
+    h12, _ = rr.linear_recurrence(jnp.asarray(a), jnp.asarray(b1 + b2))
+    ha, _ = rr.linear_recurrence(jnp.asarray(a), jnp.asarray(b1))
+    hb, _ = rr.linear_recurrence(jnp.asarray(a), jnp.asarray(b2))
+    np.testing.assert_allclose(np.asarray(h12), np.asarray(ha) + np.asarray(hb),
+                               atol=1e-4)
+
+
+@given(n=st.integers(1, 5000), seed=st.integers(0, 1000))
+@settings(**SET)
+def test_vap_accum_identity(n, seed):
+    """vap_accum with u=0 is the identity and reports ‖δ‖∞ exactly."""
+    import jax.numpy as jnp
+    from repro.kernels.vap_accum import ref as vr
+    rng = np.random.default_rng(seed)
+    p = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    d = jnp.asarray(rng.normal(0, 1, n), jnp.float32)
+    p2, d2, m = vr.vap_accum(p, d, jnp.zeros(n, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p2))
+    assert np.isclose(float(m), float(np.max(np.abs(np.asarray(d)))))
