@@ -44,6 +44,12 @@ def main() -> None:
         all_rows.append(dict(r))
         print(_csv_line(r))
 
+    print("# --- threaded PS runtime: updates/sec + read latency ---")
+    from benchmarks import bench_runtime
+    for r in bench_runtime.run():
+        all_rows.append(dict(r))
+        print(_csv_line(r))
+
     print("# --- kernel reference-path microbenchmarks ---")
     from benchmarks import bench_kernels
     for r in bench_kernels.run():

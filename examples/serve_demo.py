@@ -2,28 +2,92 @@
 ring KV caches — the same prefill/serve steps the multi-pod dry-run lowers.
 
     PYTHONPATH=src python examples/serve_demo.py [--arch gemma2-2b]
+
+With ``--ps``, serve reads from the *live threaded parameter server* instead:
+worker threads stream SGD-style updates through the sharded runtime under a
+bounded-asynchronous policy while the main thread plays the serving tier,
+issuing Get()s against a process cache and reporting read latency and
+freshness as the table converges.
+
+    PYTHONPATH=src python examples/serve_demo.py --ps [--policy ssp3]
 """
 import argparse
 import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCHS, InputShape, reduced_config
-from repro.launch import steps
-from repro.models import model as M
-from repro.models.common import instantiate_tree
+
+def run_ps_demo(args) -> None:
+    from repro.core import bsp, cvap, ssp, vap
+    from repro.runtime import PSRuntime
+
+    policy = {"bsp": bsp(), "ssp3": ssp(3), "vap": vap(0.05),
+              "cvap": cvap(3, 0.05)}[args.policy]
+    dim, n_workers, n_clocks = 256, args.workers, args.clocks
+    rng = np.random.default_rng(0)
+    A = rng.normal(0, 1, (128, dim)) / np.sqrt(dim)
+    y = A @ rng.normal(0, 1, dim)
+
+    def update_fn(w, clock, view, wrng):
+        x = view.get("x")
+        i = wrng.integers(0, len(y), 16)
+        g = (A[i].T @ (A[i] @ x - y[i])) / len(i)
+        return {"x": -0.2 * g}
+
+    rt = PSRuntime(n_workers, policy, {"x": np.zeros(dim)}, n_shards=2,
+                   threads_per_process=1, seed=0)
+    print(f"serving from live PS runtime: {n_workers} workers, "
+          f"policy {policy.kind}, {n_clocks} clocks")
+    rt.start(update_fn, n_clocks, timeout=300)
+    lat, t_next = [], time.perf_counter()
+    while rt.running:
+        t0 = time.perf_counter()
+        x = rt.read("x")                       # live Get() from the cache
+        lat.append(time.perf_counter() - t0)
+        if time.perf_counter() >= t_next:
+            obj = float(0.5 * np.mean((A @ x - y) ** 2))
+            print(f"  t+{len(lat):5d} reads  objective {obj:.5f}")
+            t_next = time.perf_counter() + 0.5
+        time.sleep(1e-3)
+    stats = rt.wait()
+    q = np.quantile(np.asarray(lat), [0.5, 0.95]) if lat else [0.0, 0.0]
+    obj = float(0.5 * np.mean((A @ rt.read('x') - y) ** 2))
+    print(f"done: {stats.n_updates} updates in {stats.sim_time:.2f}s "
+          f"({stats.n_updates / stats.sim_time:.0f} upd/s), "
+          f"final objective {obj:.5f}")
+    print(f"reads: {len(lat)} served, p50 {q[0]*1e6:.0f}us, "
+          f"p95 {q[1]*1e6:.0f}us; violations: {len(stats.violations)}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="gemma2-2b", choices=sorted(ARCHS))
+    ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--ps", action="store_true",
+                    help="serve reads from the live threaded PS runtime")
+    ap.add_argument("--policy", default="ssp3",
+                    choices=["bsp", "ssp3", "vap", "cvap"])
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--clocks", type=int, default=150)
     args = ap.parse_args()
+    if args.ps:
+        run_ps_demo(args)
+        return
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import ARCHS, InputShape, reduced_config
+    from repro.launch import steps
+    from repro.models import model as M
+    from repro.models.common import instantiate_tree
+
+    if args.arch not in ARCHS:
+        ap.error(f"unknown arch {args.arch!r} (choose from "
+                 f"{', '.join(sorted(ARCHS))})")
 
     cfg = dataclasses.replace(reduced_config(args.arch), dtype="float32")
     print(f"serving reduced {args.arch}: {cfg.n_layers}L d{cfg.d_model}")

@@ -6,10 +6,29 @@ topic counts and assignments are worker-local.  Each clock a worker sweeps
 its document shard with collapsed Gibbs against its (possibly stale /
 value-bounded) view and emits the count deltas, which is the paper's
 evaluation workload for the consistency models.
+
+The same application runs on all three implementations of the spec:
+
+  * ``backend="sim"``      — the deterministic event-driven simulator
+                             (:class:`repro.core.server.AsyncPS`);
+  * ``backend="runtime"``  — the real threaded PS
+                             (:class:`repro.runtime.PSRuntime`);
+  * :func:`run_lda_spmd`   — the SPMD sync layer (:mod:`repro.core.sync`),
+                             replicas synchronized with named-axis
+                             collectives under ``jax.vmap``.
+
+``snapshot_trajectory=True`` switches the log-likelihood recording to
+*period-start snapshots*: each worker captures its own doc-topic state and
+worker 0 captures the PS view at the top of every period, before sweeping.
+Those captures are worker-local, so the resulting trajectory is free of
+cross-thread races — under BSP (with ``barrier_reads`` on the runtime) all
+three backends produce element-wise identical trajectories, which the
+conformance suite asserts.  Count deltas are integers, so float accumulation
+is exact and order-independent.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -37,6 +56,16 @@ def _initial_counts(states: List[_WorkerState], vocab: int, K: int):
     return wt, tc
 
 
+def _init_states(corpus: LDACorpus, n_topics: int, n_workers: int, seed: int):
+    rng = np.random.default_rng(seed)
+    shards = [list(range(w, corpus.n_docs, n_workers))
+              for w in range(n_workers)]
+    states = [_WorkerState([corpus.docs[i] for i in sh], n_topics, rng)
+              for sh in shards]
+    wt0, tc0 = _initial_counts(states, corpus.vocab_size, n_topics)
+    return shards, states, wt0, tc0
+
+
 def log_likelihood(corpus: LDACorpus, wt: np.ndarray, tc: np.ndarray,
                    doc_topic: np.ndarray, doc_ids, alpha: float,
                    beta: float) -> float:
@@ -53,63 +82,100 @@ def log_likelihood(corpus: LDACorpus, wt: np.ndarray, tc: np.ndarray,
     return ll
 
 
-def run_lda(corpus: LDACorpus, n_topics: int, policy: Policy,
-            n_workers: int, n_clocks: int, alpha: float = 0.1,
-            beta: float = 0.01, seed: int = 0,
-            network: Optional[NetworkModel] = None,
-            straggler=None, collect_stats: bool = False):
-    """Returns the per-clock corpus log-likelihood list (and stats if asked)."""
-    rng = np.random.default_rng(seed)
-    V, K = corpus.vocab_size, n_topics
-    shards = [list(range(w, corpus.n_docs, n_workers)) for w in range(n_workers)]
-    states = [_WorkerState([corpus.docs[i] for i in sh], K, rng)
-              for sh in shards]
-    wt0, tc0 = _initial_counts(states, V, K)
+def _gibbs_sweep(st: _WorkerState, wt: np.ndarray, tc: np.ndarray,
+                 V: int, alpha: float, beta: float,
+                 wrng: np.random.Generator):
+    """One collapsed-Gibbs sweep over a worker's shard; returns count deltas."""
+    K = tc.shape[0]
+    d_wt = np.zeros_like(wt)
+    d_tc = np.zeros_like(tc)
+    for di, doc in enumerate(st.docs):
+        dt = st.doc_topic[di]
+        zs = st.assign[di]
+        for ti, word in enumerate(doc):
+            z = zs[ti]
+            # remove current assignment (local view)
+            dt[z] -= 1
+            d_wt[word, z] -= 1
+            d_tc[z] -= 1
+            nw = np.maximum(wt[word] + d_wt[word] + beta, beta)
+            nt = np.maximum(tc + d_tc + V * beta, V * beta)
+            p = (dt + alpha) * nw / nt
+            p = np.maximum(p, 1e-12)
+            z_new = wrng.choice(K, p=p / p.sum())
+            zs[ti] = z_new
+            dt[z_new] += 1
+            d_wt[word, z_new] += 1
+            d_tc[z_new] += 1
+    return d_wt, d_tc
 
-    lls: List[float] = []
 
+class _Snapshots:
+    """Period-start captures, written by each worker under distinct keys."""
+
+    def __init__(self):
+        self.doc: Dict[Tuple[int, int], np.ndarray] = {}   # (worker, clock)
+        self.view: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}  # clock
+
+    def trajectory(self, corpus: LDACorpus, shards, n_workers: int,
+                   n_clocks: int, alpha: float, beta: float) -> List[float]:
+        ids = [i for sh in shards for i in sh]
+        lls = []
+        for c in range(n_clocks):
+            wt, tc = self.view[c]
+            dt_all = np.concatenate([self.doc[(w, c)]
+                                     for w in range(n_workers)])
+            lls.append(log_likelihood(corpus, wt, tc, dt_all, ids,
+                                      alpha, beta))
+        return lls
+
+
+def _make_update_fn(states: List[_WorkerState], V: int, alpha: float,
+                    beta: float, snapshots: Optional[_Snapshots] = None):
     def update_fn(w: int, clock: int, view, wrng: np.random.Generator):
         st = states[w]
         wt = view.get("word_topic")
         tc = view.get("topic")
-        d_wt = np.zeros_like(wt)
-        d_tc = np.zeros_like(tc)
-        for di, doc in enumerate(st.docs):
-            dt = st.doc_topic[di]
-            zs = st.assign[di]
-            for ti, word in enumerate(doc):
-                z = zs[ti]
-                # remove current assignment (local view)
-                dt[z] -= 1
-                d_wt[word, z] -= 1
-                d_tc[z] -= 1
-                nw = np.maximum(wt[word] + d_wt[word] + beta, beta)
-                nt = np.maximum(tc + d_tc + V * beta, V * beta)
-                p = (dt + alpha) * nw / nt
-                p = np.maximum(p, 1e-12)
-                z_new = wrng.choice(K, p=p / p.sum())
-                zs[ti] = z_new
-                dt[z_new] += 1
-                d_wt[word, z_new] += 1
-                d_tc[z_new] += 1
+        if snapshots is not None:
+            # worker-local + before the sweep: race-free and deterministic
+            snapshots.doc[(w, clock)] = st.doc_topic.copy()
+            if w == 0:
+                snapshots.view[clock] = (wt.copy(), tc.copy())
+        d_wt, d_tc = _gibbs_sweep(st, wt, tc, V, alpha, beta, wrng)
         return {"word_topic": d_wt, "topic": d_tc}
+    return update_fn
 
-    # a clock sweeps the worker's shard once: compute time ∝ tokens owned
-    # (per-token Gibbs cost normalized to 1ms) — strong scaling shrinks it
-    tokens_of = [sum(len(d) for d in st.docs) for st in states]
-    ps = AsyncPS(n_workers, policy,
-                 {"word_topic": wt0, "topic": tc0},
-                 network=network or NetworkModel(seed=seed),
-                 compute_time=lambda w: 0.001 * tokens_of[w],
-                 straggler=straggler, seed=seed)
+
+def run_lda(corpus: LDACorpus, n_topics: int, policy: Policy,
+            n_workers: int, n_clocks: int, alpha: float = 0.1,
+            beta: float = 0.01, seed: int = 0,
+            network: Optional[NetworkModel] = None,
+            straggler=None, collect_stats: bool = False,
+            backend: str = "sim", threads_per_process: int = 1,
+            n_shards: int = 2, barrier_reads: bool = False,
+            snapshot_trajectory: bool = False, timeout: float = 300.0):
+    """Returns the per-clock corpus log-likelihood list (and stats if asked).
+
+    ``backend="sim"`` runs the event-driven simulator (``network`` /
+    ``straggler`` model the cluster); ``backend="runtime"`` runs the real
+    threaded PS (``threads_per_process`` / ``n_shards`` / ``barrier_reads``
+    configure it; latency is wall-clock, so ``network`` and ``straggler`` are
+    ignored).
+    """
+    V, K = corpus.vocab_size, n_topics
+    shards, states, wt0, tc0 = _init_states(corpus, n_topics, n_workers, seed)
+
+    snapshots = _Snapshots() if snapshot_trajectory else None
+    update_fn = _make_update_fn(states, V, alpha, beta, snapshots)
+
+    lls: List[float] = []
 
     # wrap update_fn to record the log-likelihood once per full clock
-    done_clocks = [0]
-    orig = update_fn
-
+    # (legacy recording: approximate under the threaded runtime, where peer
+    # doc-topic states are mid-sweep; use snapshot_trajectory for exactness)
     def wrapped(w, clock, view, wrng):
-        out = orig(w, clock, view, wrng)
-        if w == 0:
+        out = update_fn(w, clock, view, wrng)
+        if w == 0 and snapshots is None:
             wt = view.get("word_topic")
             tc = view.get("topic")
             dt_all = np.concatenate([s.doc_topic for s in states])
@@ -117,7 +183,106 @@ def run_lda(corpus: LDACorpus, n_topics: int, policy: Policy,
             lls.append(log_likelihood(corpus, wt, tc, dt_all, ids, alpha, beta))
         return out
 
-    stats = ps.run(wrapped, n_clocks)
+    if backend == "sim":
+        # a clock sweeps the worker's shard once: compute time ∝ tokens owned
+        # (per-token Gibbs cost normalized to 1ms) — strong scaling shrinks it
+        tokens_of = [sum(len(d) for d in st.docs) for st in states]
+        ps = AsyncPS(n_workers, policy,
+                     {"word_topic": wt0, "topic": tc0},
+                     network=network or NetworkModel(seed=seed),
+                     compute_time=lambda w: 0.001 * tokens_of[w],
+                     straggler=straggler, seed=seed)
+        stats = ps.run(wrapped, n_clocks)
+    elif backend == "runtime":
+        from repro.runtime import PSRuntime
+        rt = PSRuntime(n_workers, policy,
+                       {"word_topic": wt0, "topic": tc0},
+                       n_shards=n_shards,
+                       threads_per_process=threads_per_process,
+                       seed=seed, barrier_reads=barrier_reads)
+        stats = rt.run(wrapped, n_clocks, timeout=timeout)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    if snapshots is not None:
+        lls = snapshots.trajectory(corpus, shards, n_workers, n_clocks,
+                                   alpha, beta)
     if collect_stats:
         return lls, stats
     return lls
+
+
+class _DictView:
+    """Minimal ViewHandle over plain arrays (the SPMD replica's params)."""
+
+    def __init__(self, arrays: Dict[str, np.ndarray]):
+        self._a = arrays
+        self.gets = 0
+
+    def get(self, key: str) -> np.ndarray:
+        self.gets += 1
+        return self._a[key].copy()
+
+    def keys(self):
+        return list(self._a.keys())
+
+
+def run_lda_spmd(corpus: LDACorpus, n_topics: int, n_workers: int,
+                 n_clocks: int, policy: Optional[Policy] = None,
+                 alpha: float = 0.1, beta: float = 0.01, seed: int = 0
+                 ) -> List[float]:
+    """LDA on the SPMD sync layer (:mod:`repro.core.sync`).
+
+    Each worker is a data-parallel replica holding a drifting copy of the
+    count tables; per clock the host computes the Gibbs deltas from each
+    replica's view, then :func:`repro.core.sync.apply_and_sync` runs under
+    ``jax.vmap(axis_name="data")`` so the named-axis collectives execute
+    without a multi-device mesh.  Counts are small integers — exact in
+    float32 — so under BSP the trajectory is element-wise identical to the
+    simulator's and the threaded runtime's (the conformance suite's point).
+
+    Returns the period-start snapshot trajectory (see module docstring).
+    """
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import policies as P
+    from repro.core import sync
+
+    policy = policy or P.bsp()
+    V = corpus.vocab_size
+    shards, states, wt0, tc0 = _init_states(corpus, n_topics, n_workers, seed)
+    snapshots = _Snapshots()
+    update_fn = _make_update_fn(states, V, alpha, beta, snapshots)
+    rngs = [np.random.default_rng(seed * 7919 + w) for w in range(n_workers)]
+
+    one = {"word_topic": jnp.asarray(wt0, jnp.float32),
+           "topic": jnp.asarray(tc0, jnp.float32)}
+    params = jax.tree.map(lambda x: jnp.stack([x] * n_workers), one)
+    sync_states = jax.tree.map(lambda x: jnp.stack([x] * n_workers),
+                               sync.init_sync_state(one))
+
+    @functools.partial(jax.jit, static_argnames=("pol",))
+    def step(p, s, u, pol):
+        f = jax.vmap(
+            lambda pp, ss, uu: sync.apply_and_sync(pp, ss, uu, pol,
+                                                   dp_axes=("data",)),
+            axis_name="data")
+        return f(p, s, u)
+
+    for clock in range(n_clocks):
+        host = {k: np.asarray(v, dtype=np.float64)
+                for k, v in params.items()}                 # (P, ...) views
+        ups = []
+        for w in range(n_workers):
+            view = _DictView({"word_topic": host["word_topic"][w],
+                              "topic": host["topic"][w]})
+            ups.append(update_fn(w, clock, view, rngs[w]))
+        u = {k: jnp.stack([jnp.asarray(up[k], jnp.float32) for up in ups])
+             for k in params}
+        params, sync_states, _ = step(params, sync_states, u, policy)
+
+    return snapshots.trajectory(corpus, shards, n_workers, n_clocks,
+                                alpha, beta)

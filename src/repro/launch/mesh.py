@@ -11,6 +11,22 @@ from typing import Tuple
 import jax
 
 
+def shard_map(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions.
+
+    jax >= 0.6 exposes ``jax.shard_map(..., check_vma=...)``; older releases
+    only have ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+    Replication checking is disabled in both spellings (the step functions
+    use explicit collectives).
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 chips per pod; 2 pods when multi_pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

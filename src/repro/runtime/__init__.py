@@ -1,0 +1,18 @@
+"""Threaded asynchronous parameter-server runtime (Petuum-PS style).
+
+Third implementation of the paper's consistency models, alongside the
+event-driven simulator (:mod:`repro.core.server`, the executable spec) and
+the SPMD sync layer (:mod:`repro.core.sync`).  All three share the Policy /
+Consistency Controller split and are differentially tested against each other
+in ``tests/test_runtime_conformance.py``.
+"""
+from repro.runtime.messages import (AckMsg, Channel, ClockMarker, ClockMsg,
+                                    DeliverMsg, FullyDelivered, UpdateMsg)
+from repro.runtime.runtime import ClientProcess, PSRuntime, RuntimeViewHandle
+from repro.runtime.shard import ServerShard
+
+__all__ = [
+    "AckMsg", "Channel", "ClientProcess", "ClockMarker", "ClockMsg",
+    "DeliverMsg", "FullyDelivered", "PSRuntime", "RuntimeViewHandle",
+    "ServerShard", "UpdateMsg",
+]

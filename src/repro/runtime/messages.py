@@ -1,0 +1,116 @@
+"""Wire protocol of the threaded parameter-server runtime.
+
+All cross-thread communication goes through :class:`Channel` objects — FIFO
+per (sender, receiver) pair, mirroring the simulator's per-channel delivery
+ordering (``server.py`` ``_last_sched`` / ``_last_seq_seen``).  A channel
+stamps every message with a per-channel sequence number under its lock so the
+receiver can *assert* FIFO delivery instead of assuming it; violations are
+recorded in ``RunStats.violations`` exactly like the simulator does.
+
+Message flow (client process p, server shard s):
+
+    p -> s : UpdateMsg   one hash-partitioned row-slice of an Inc
+             ClockMsg    process p completed period `clock`
+             AckMsg      a DeliverMsg was applied at p
+    s -> p : DeliverMsg  propagate an update part to a peer process cache
+             ClockMarker shard-side echo of a peer's ClockMsg (frontier)
+             FullyDelivered
+                         every peer acked an update part — the origin
+                         worker's unsynchronized accumulator may shrink
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass, field
+
+import numpy as np
+
+SHUTDOWN = None  # sentinel put on an inbox to stop its thread
+
+
+@dataclass
+class UpdateMsg:
+    uid: int                 # unique id of this update *part*
+    worker: int              # global worker-thread id
+    process: int             # origin client process
+    ts: int                  # clock timestamp (0-based period index)
+    key: str
+    rows: np.ndarray         # row ids of the (R, C) key matrix in this part
+    delta: np.ndarray        # (len(rows), C) row deltas
+    seq: int = -1
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.delta.nbytes)
+
+
+@dataclass
+class ClockMsg:
+    process: int
+    clock: int               # period just completed by `process`
+    seq: int = -1
+
+
+@dataclass
+class AckMsg:
+    uid: int
+    process: int             # acking process
+    seq: int = -1
+
+
+@dataclass
+class DeliverMsg:
+    uid: int
+    worker: int
+    process: int             # origin process
+    shard: int
+    ts: int
+    key: str
+    rows: np.ndarray
+    delta: np.ndarray
+    seq: int = -1
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.delta.nbytes)
+
+
+@dataclass
+class ClockMarker:
+    process: int             # origin process whose period completed
+    shard: int
+    clock: int
+    seq: int = -1
+
+
+@dataclass
+class FullyDelivered:
+    uid: int
+    worker: int
+    key: str
+    rows: np.ndarray
+    delta: np.ndarray
+    shard: int
+    seq: int = -1
+
+
+@dataclass
+class Channel:
+    """FIFO edge into a receiver's inbox, stamping per-channel seq numbers.
+
+    The stamp and the enqueue happen under one lock so the sequence numbers
+    are monotone in *queue order* even with multiple sender threads sharing
+    the channel (all workers of a process send on the same proc->shard edge).
+    """
+
+    name: str
+    inbox: queue.Queue
+    _seq: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def send(self, msg) -> None:
+        with self._lock:
+            msg.seq = self._seq
+            self._seq += 1
+            self.inbox.put(msg)

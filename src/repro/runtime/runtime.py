@@ -1,0 +1,524 @@
+"""Real multi-threaded asynchronous parameter server (DESIGN.md layer 1').
+
+Where :mod:`repro.core.server` *simulates* the paper's bounded-asynchronous
+semantics in a deterministic event loop, this module *implements* them with
+actual concurrency, in the style of Petuum-PS:
+
+  * N worker threads per client process share a **process cache**
+    (read-my-writes: a worker's Incs are visible to its own process
+    immediately);
+  * **server shards** (one thread each) own hash-partitioned rows of
+    :class:`repro.core.tables.Table` — row ``r`` of a key lives on shard
+    ``r % n_shards`` — and hold the master copy;
+  * all edges are **FIFO per-channel queues** with sequence numbers the
+    receivers assert in check mode;
+  * the **Consistency Controller** (:mod:`repro.core.controller`, shared with
+    the simulator) gates progress: the clock bound blocks a worker whose
+    period would outrun the delivery frontier (BSP/SSP/CAP/CVAP), and the
+    value bound blocks an Inc that would push the element-wise unsynchronized
+    accumulator past ``max(u, v_thr)`` (VAP/CVAP);
+  * within a period, updates are applied and sent **largest-magnitude first**
+    (paper §4.2); BSP/SSP hold them in a per-worker outbox until Clock().
+
+The simulator stays the executable specification: given the same
+``update_fn`` both produce the same set of updates, so the quiesced runtime
+state must equal the simulator's final state element-wise (updates are
+additive and commutative).  ``tests/test_runtime_conformance.py`` asserts
+exactly that, plus the clock/value invariants under free thread
+interleavings.
+
+``barrier_reads`` (conformance mode, requires ``threads_per_process == 1``):
+peer updates stamped with the reader's current period or later are staged and
+applied only at the period boundary, so reads see *exactly* the updates the
+consistency model guarantees and nothing fresher.  Under BSP this makes the
+runtime bit-deterministic, which is what lets differential tests compare LDA
+trajectories against the simulator and the SPMD sync layer.
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import controller
+from repro.core.policies import Policy
+from repro.core.server import RunStats, UpdateMap
+from repro.runtime.messages import (SHUTDOWN, AckMsg, Channel, ClockMarker,
+                                    ClockMsg, DeliverMsg, FullyDelivered,
+                                    UpdateMsg)
+from repro.runtime.shard import ServerShard
+
+
+class ClientProcess:
+    """A client process: shared cache + comm thread for its worker threads."""
+
+    def __init__(self, rt: "PSRuntime", pid: int):
+        self.rt = rt
+        self.pid = pid
+        self.cond = threading.Condition()     # guards every field below
+        self.cache: Dict[str, np.ndarray] = {k: v.copy()
+                                             for k, v in rt._x0.items()}
+        self.workers = list(range(pid * rt.tpp, (pid + 1) * rt.tpp))
+        # per-worker element-wise unsynchronized accumulators
+        self.unsynced: Dict[int, Dict[str, np.ndarray]] = {
+            w: {k: np.zeros_like(v) for k, v in rt._x0.items()}
+            for w in self.workers}
+        self.thread_clock: Dict[int, int] = {w: 0 for w in self.workers}
+        self.sent_clock = 0                   # completed periods announced
+        # marks[p, s]: highest period of process p fully forwarded by shard s
+        self.marks = np.full((rt.n_proc, rt.n_shards), -1, dtype=np.int64)
+        self.staged: List[DeliverMsg] = []    # barrier_reads holding pen
+        self.inbox: queue.Queue = queue.Queue()
+        self._last_seq = defaultdict(lambda: -1)   # per sender shard
+        self.thread = threading.Thread(
+            target=self._loop, name=f"ps-proc-{pid}", daemon=True)
+
+    # ---------------------------------------------------------------- frontier
+    def frontier_min(self) -> int:
+        """Lowest period every peer process is known-delivered through."""
+        peers = [p for p in range(self.rt.n_proc) if p != self.pid]
+        if not peers:
+            return 1 << 60
+        return int(self.marks[peers, :].min())
+
+    def cur_period(self) -> int:
+        return min(self.thread_clock.values())
+
+    # ---------------------------------------------------------------- comm
+    def _loop(self) -> None:
+        while True:
+            msg = self.inbox.get()
+            if msg is SHUTDOWN:
+                self.inbox.task_done()
+                return
+            try:
+                self._handle(msg)
+            except BaseException as e:
+                self.rt._record_error(e)
+            finally:
+                self.inbox.task_done()
+                self.rt._msg_done()
+
+    def _handle(self, msg) -> None:
+        rt = self.rt
+        ack: Optional[Tuple[Channel, AckMsg]] = None
+        with self.cond:
+            if rt.check:
+                last = self._last_seq[msg.shard]
+                if msg.seq != last + 1:
+                    rt._violation(f"FIFO violation: shard {msg.shard}->proc "
+                                  f"{self.pid} seq {msg.seq} after {last}")
+                self._last_seq[msg.shard] = msg.seq
+            if isinstance(msg, DeliverMsg):
+                if rt.barrier_reads and msg.ts >= self.cur_period():
+                    self.staged.append(msg)
+                else:
+                    self._apply_delivery(msg)
+                    ack = (rt._chan_ps[self.pid][msg.shard],
+                           AckMsg(msg.uid, self.pid))
+            elif isinstance(msg, ClockMarker):
+                # max(): the frontier may never regress (channel FIFO already
+                # orders markers per (proc, shard); this makes it local)
+                self.marks[msg.process, msg.shard] = max(
+                    self.marks[msg.process, msg.shard], msg.clock)
+            elif isinstance(msg, FullyDelivered):
+                acc = self.unsynced[msg.worker][msg.key]
+                res = acc[msg.rows] - msg.delta
+                acc[msg.rows] = np.where(np.abs(res) < 1e-12, 0.0, res)
+            else:
+                raise TypeError(f"proc {self.pid}: unexpected message {msg!r}")
+            self.cond.notify_all()
+        if ack is not None:
+            rt._send(*ack)
+
+    def _apply_delivery(self, msg: DeliverMsg) -> None:
+        self.cache[msg.key][msg.rows] += msg.delta
+
+    def release_staged(self, new_period: int) -> List[Tuple[Channel, AckMsg]]:
+        """Apply staged deliveries now inside the staleness window.
+
+        Caller holds ``self.cond`` (the ticking worker, at a period
+        boundary).  Returns the acks to send after the lock is dropped.
+        """
+        acks, keep = [], []
+        for msg in self.staged:
+            if msg.ts < new_period:
+                self._apply_delivery(msg)
+                acks.append((self.rt._chan_ps[self.pid][msg.shard],
+                             AckMsg(msg.uid, self.pid)))
+            else:
+                keep.append(msg)
+        self.staged = keep
+        return acks
+
+
+class RuntimeViewHandle:
+    """Read API handed to update_fn — mirrors the simulator's ViewHandle."""
+
+    def __init__(self, rt: "PSRuntime", proc: ClientProcess, worker: int):
+        self._rt = rt
+        self._proc = proc
+        self.worker = worker
+        self.gets = 0
+
+    def get(self, key: str) -> np.ndarray:
+        self.gets += 1
+        with self._proc.cond:
+            flat = self._proc.cache[key].copy()
+        return flat.reshape(self._rt._shapes[key])
+
+    def keys(self) -> Sequence[str]:
+        return list(self._rt._x0.keys())
+
+
+class PSRuntime:
+    """The threaded asynchronous parameter server.
+
+    Drop-in counterpart of :class:`repro.core.server.AsyncPS` — same
+    ``update_fn(worker, clock, view, rng)`` contract, same per-worker rng
+    seeding, same :class:`RunStats` — but wall-clock concurrent instead of
+    simulated.  ``NetworkModel`` / ``compute_time`` / ``straggler`` have no
+    analogue here: latency and skew are real.
+    """
+
+    def __init__(self, n_workers: int, policy: Policy,
+                 init_params: UpdateMap,
+                 n_shards: int = 2,
+                 threads_per_process: int = 1,
+                 seed: int = 0,
+                 prioritize_by_magnitude: bool = True,
+                 check_invariants: bool = True,
+                 barrier_reads: bool = False):
+        if n_workers % threads_per_process:
+            raise ValueError("n_workers must divide into processes evenly")
+        if n_shards < 1:
+            raise ValueError("need at least one server shard")
+        if barrier_reads and threads_per_process != 1:
+            raise ValueError("barrier_reads requires threads_per_process == 1")
+        self.P = n_workers
+        self.tpp = threads_per_process
+        self.n_proc = n_workers // threads_per_process
+        self.n_shards = n_shards
+        self.policy = policy
+        self.seed = seed
+        self.prioritize = prioritize_by_magnitude
+        self.check = check_invariants
+        self.barrier_reads = barrier_reads
+
+        # canonical (R, C) float64 master shapes; original shapes for reads
+        self._shapes: Dict[str, Tuple[int, ...]] = {}
+        self._x0: Dict[str, np.ndarray] = {}
+        self._shard_rows: Dict[str, List[np.ndarray]] = {}
+        for key, v in init_params.items():
+            a = np.asarray(v, dtype=np.float64)
+            self._shapes[key] = a.shape
+            flat = a.reshape(a.shape[0], -1) if a.ndim > 1 else a.reshape(-1, 1)
+            self._x0[key] = flat.copy()
+            rows = np.arange(flat.shape[0])
+            self._shard_rows[key] = [rows[rows % n_shards == s]
+                                     for s in range(n_shards)]
+
+        self.stats = RunStats()
+        self._slock = threading.Lock()
+        self._total = {k: np.zeros_like(v) for k, v in self._x0.items()}
+        self._uid = itertools.count()
+        self._done_clock = 0
+        self._t0 = 0.0
+        self._deadline = float("inf")
+        self._errors: List[BaseException] = []
+        self._qcond = threading.Condition()   # guards _inflight
+        self._inflight = 0
+
+        self.shards = [ServerShard(self, s) for s in range(n_shards)]
+        self.procs = [ClientProcess(self, p) for p in range(self.n_proc)]
+        # FIFO channels: client process -> shard, shard -> client process
+        self._chan_ps = [[Channel(f"p{p}->s{s}", self.shards[s].inbox)
+                          for s in range(n_shards)] for p in range(self.n_proc)]
+        self._chan_sp = [[Channel(f"s{s}->p{p}", self.procs[p].inbox)
+                          for p in range(self.n_proc)] for s in range(n_shards)]
+
+        self.update_fn: Optional[Callable] = None
+        self.n_clocks = 0
+        self._workers: List[threading.Thread] = []
+        self._started = False
+        self._finished = False
+
+    # ------------------------------------------------------------- plumbing
+    def proc_of(self, worker: int) -> int:
+        return worker // self.tpp
+
+    def _send(self, chan: Channel, msg) -> None:
+        with self._qcond:
+            self._inflight += 1
+        chan.send(msg)
+
+    def _msg_done(self) -> None:
+        with self._qcond:
+            self._inflight -= 1
+            if self._inflight == 0:
+                self._qcond.notify_all()
+
+    def _violation(self, text: str) -> None:
+        with self._slock:
+            self.stats.violations.append(text)
+
+    def _record_error(self, e: BaseException) -> None:
+        with self._slock:
+            self._errors.append(e)
+
+    def _check_alive(self) -> None:
+        if time.monotonic() > self._deadline:
+            raise RuntimeError(
+                "runtime deadlock: wall-clock deadline exceeded "
+                f"(inflight={self._inflight})")
+        if self._errors:
+            raise RuntimeError("runtime aborted: peer thread failed")
+
+    # ---------------------------------------------------------------- running
+    def start(self, update_fn: Callable, n_clocks: int,
+              timeout: float = 120.0) -> None:
+        """Launch shard/comm/worker threads; pair with :meth:`wait`."""
+        if self._started:
+            raise RuntimeError("runtime already started")
+        self._started = True
+        self.update_fn = update_fn
+        self.n_clocks = n_clocks
+        self._deadline = time.monotonic() + timeout
+        self._t0 = time.monotonic()
+        for s in self.shards:
+            s.thread.start()
+        for p in self.procs:
+            p.thread.start()
+        self._workers = [threading.Thread(target=self._worker_loop, args=(w,),
+                                          name=f"ps-worker-{w}", daemon=True)
+                         for w in range(self.P)]
+        for t in self._workers:
+            t.start()
+
+    def wait(self) -> RunStats:
+        """Join workers, quiesce all in-flight messages, run final checks."""
+        if not self._started or self._finished:
+            raise RuntimeError("runtime not running")
+        for t in self._workers:
+            while t.is_alive():
+                t.join(timeout=0.5)
+                if time.monotonic() > self._deadline:
+                    self._record_error(RuntimeError(
+                        f"worker {t.name} still alive at deadline"))
+                    break
+        if not self._errors:
+            with self._qcond:
+                while self._inflight > 0:
+                    if time.monotonic() > self._deadline:
+                        self._record_error(RuntimeError(
+                            f"quiesce timed out ({self._inflight} in flight)"))
+                        break
+                    self._qcond.wait(0.25)
+        self._finished = True
+        for p in self.procs:
+            p.inbox.put(SHUTDOWN)
+        for s in self.shards:
+            s.inbox.put(SHUTDOWN)
+        for th in [p.thread for p in self.procs] + [s.thread for s in self.shards]:
+            th.join(timeout=5.0)
+        self.stats.sim_time = time.monotonic() - self._t0
+        if self._errors:
+            raise RuntimeError(
+                f"runtime failed: {self._errors[0]!r}") from self._errors[0]
+        if self.check:
+            self._final_checks()
+        return self.stats
+
+    def run(self, update_fn: Callable, n_clocks: int,
+            timeout: float = 120.0) -> RunStats:
+        """Run every worker for ``n_clocks`` periods (start + wait)."""
+        self.start(update_fn, n_clocks, timeout=timeout)
+        return self.wait()
+
+    # ------------------------------------------------------------ worker flow
+    def _worker_loop(self, w: int) -> None:
+        proc = self.procs[self.proc_of(w)]
+        rng = np.random.default_rng(self.seed * 7919 + w)
+        try:
+            for clock in range(self.n_clocks):
+                self._clock_gate(w, clock, proc)
+                view = RuntimeViewHandle(self, proc, w)
+                upd = self.update_fn(w, clock, view, rng)
+                items = [(k, np.asarray(d, dtype=np.float64))
+                         for k, d in upd.items()]
+                if self.prioritize:
+                    items.sort(key=lambda kv: -float(np.max(np.abs(kv[1]))))
+                outbox: List[Tuple[Channel, UpdateMsg]] = []
+                for key, delta in items:
+                    sends = self._apply_update(w, clock, proc, key, delta)
+                    if self.policy.push_at_clock_only:
+                        outbox.extend(sends)
+                    else:
+                        for chan, msg in sends:
+                            self._send(chan, msg)
+                self._on_clock(w, proc, outbox)
+        except BaseException as e:
+            self._record_error(e)
+
+    def _clock_gate(self, w: int, clock: int, proc: ClientProcess) -> None:
+        """Block until the delivery frontier admits this period (clock bound)."""
+        if self.n_proc == 1 or not self.policy.clock_bounded:
+            return
+        need = clock - self.policy.staleness - 1
+        if need < 0:
+            return
+        t0 = time.monotonic()
+        blocked = False
+        with proc.cond:
+            while proc.frontier_min() < need:
+                blocked = True
+                self._check_alive()
+                proc.cond.wait(0.25)
+            if self.check:
+                st = clock - proc.frontier_min() - 1
+                with self._slock:
+                    self.stats.max_observed_staleness = max(
+                        self.stats.max_observed_staleness, st)
+                    if st > self.policy.staleness:
+                        self.stats.violations.append(
+                            f"staleness violation: worker {w} clock {clock} "
+                            f"observed {st}")
+        if blocked:
+            with self._slock:
+                self.stats.block_time_clock += time.monotonic() - t0
+
+    def _apply_update(self, w: int, clock: int, proc: ClientProcess,
+                      key: str, delta: np.ndarray
+                      ) -> List[Tuple[Channel, UpdateMsg]]:
+        """Value-gate, apply to the process cache, split into shard parts."""
+        d2 = (delta.reshape(delta.shape[0], -1) if delta.ndim > 1
+              else delta.reshape(-1, 1))
+        t0 = time.monotonic()
+        blocked = False
+        with proc.cond:
+            while True:
+                ok, _ = controller.value_gate(
+                    self.policy, proc.unsynced[w][key], d2)
+                if ok:
+                    break
+                blocked = True
+                self._check_alive()
+                proc.cond.wait(0.25)
+            proc.cache[key] += d2                       # read-my-writes
+            acc = proc.unsynced[w][key]
+            acc += d2
+            mag = float(np.max(np.abs(d2))) if d2.size else 0.0
+            with self._slock:
+                self.stats.n_updates += 1
+                self.stats.max_update_mag = max(self.stats.max_update_mag, mag)
+                self._total[key] += d2
+                if blocked:
+                    self.stats.block_time_value += time.monotonic() - t0
+                if self.check and self.policy.value_bounded:
+                    bound = controller.vap_unsynced_bound(
+                        self.policy, self.stats.max_update_mag)
+                    mx = float(np.max(np.abs(acc)))
+                    self.stats.max_unsynced_mag = max(
+                        self.stats.max_unsynced_mag, mx)
+                    if mx > bound + 1e-9:
+                        self.stats.violations.append(
+                            f"VAP violation: worker {w} unsynced {mx} > {bound}")
+        sends = []
+        for s in range(self.n_shards):
+            rows = self._shard_rows[key][s]
+            if rows.size == 0:
+                continue
+            part = d2[rows]
+            nz = np.any(part != 0.0, axis=1)
+            if not nz.all():                            # elide all-zero rows
+                rows, part = rows[nz], part[nz]
+                if rows.size == 0:
+                    continue
+            msg = UpdateMsg(next(self._uid), w, proc.pid, clock, key,
+                            rows, part.copy())
+            sends.append((self._chan_ps[proc.pid][s], msg))
+        return sends
+
+    def _on_clock(self, w: int, proc: ClientProcess,
+                  outbox: List[Tuple[Channel, UpdateMsg]]) -> None:
+        """Clock(): flush the SSP outbox, tick, maybe advance the process."""
+        for chan, msg in outbox:        # before the tick, matching the sim
+            self._send(chan, msg)
+        advanced: List[int] = []
+        staged_acks: List[Tuple[Channel, AckMsg]] = []
+        with proc.cond:
+            proc.thread_clock[w] += 1
+            new_min = proc.cur_period()     # process clock = min of threads
+            while proc.sent_clock < new_min:
+                advanced.append(proc.sent_clock)
+                proc.sent_clock += 1
+            if advanced and self.barrier_reads:
+                staged_acks = proc.release_staged(new_min)
+            proc.cond.notify_all()
+        for c in advanced:
+            for s in range(self.n_shards):
+                self._send(self._chan_ps[proc.pid][s], ClockMsg(proc.pid, c))
+        for chan, msg in staged_acks:
+            self._send(chan, msg)
+        if advanced:
+            self._note_global_clock()
+
+    def _note_global_clock(self) -> None:
+        done = min(p.sent_clock for p in self.procs)
+        with self._slock:
+            while self._done_clock < done:
+                self._done_clock += 1
+                self.stats.clock_times.append(time.monotonic() - self._t0)
+
+    @property
+    def running(self) -> bool:
+        """True while worker threads are still producing updates."""
+        return (self._started and not self._finished
+                and any(t.is_alive() for t in self._workers))
+
+    # ------------------------------------------------------------- reads
+    def read(self, key: str, process: int = 0) -> np.ndarray:
+        """Serving read: a Get() against a live process cache."""
+        proc = self.procs[process]
+        with proc.cond:
+            flat = proc.cache[key].copy()
+        return flat.reshape(self._shapes[key])
+
+    def master_value(self, key: str) -> np.ndarray:
+        """Assemble the authoritative value from the shard tables.
+
+        Only meaningful once the runtime is quiesced (after :meth:`wait`).
+        """
+        out = np.zeros_like(self._x0[key])
+        for shard in self.shards:
+            for rid, row in shard.rows_snapshot(key).items():
+                out[rid] = row
+        return out.reshape(self._shapes[key])
+
+    def view(self, process: int) -> Dict[str, np.ndarray]:
+        """A process cache as {key: array in the original shape}."""
+        proc = self.procs[process]
+        with proc.cond:
+            return {k: v.copy().reshape(self._shapes[k])
+                    for k, v in proc.cache.items()}
+
+    # ------------------------------------------------------------- checks
+    def _final_checks(self) -> None:
+        """Eventual consistency: caches and master equal x0 + sum(updates)."""
+        expected = {k: self._x0[k] + self._total[k] for k in self._x0}
+        for p in range(self.n_proc):
+            cache = self.procs[p].cache
+            for k in self._x0:
+                if not np.allclose(cache[k], expected[k], atol=1e-6):
+                    self._violation(
+                        f"eventual-consistency violation on {k} (process {p})")
+        for k in self._x0:
+            master = self.master_value(k).reshape(self._x0[k].shape)
+            if not np.allclose(master, expected[k], atol=1e-6):
+                self._violation(
+                    f"eventual-consistency violation on {k} (shard tables)")

@@ -1,0 +1,168 @@
+"""Server shard of the threaded PS runtime (paper §4.1).
+
+Each shard is one thread owning a hash partition of every key's rows, stored
+in real :class:`repro.core.tables.Table` objects (row ``r`` of a key lives on
+shard ``r % n_shards`` — the same rule as ``Table.server_partition``).  The
+shard applies incoming update parts to its tables (the master copy), then
+propagates them to every peer process cache, echoes client clock messages as
+:class:`ClockMarker` (the delivery frontier the clock bound blocks on), and
+tracks acks so the origin worker's unsynchronized accumulator can shrink only
+once an update really is visible everywhere — the paper's definition of a
+*synchronized* update.
+
+Strong-VAP (paper §2, "half-synchronized" updates): before starting a
+delivery the shard consults :func:`controller.strong_delivery_gate`; gated
+updates queue FIFO per key and are released as acks free half-sync budget,
+mirroring ``server.py`` ``_try_start_delivery`` / ``_on_deliver``.  As in the
+simulator, a queued update is *not* counted against the clock frontier — the
+marker echo is immediate — so the two bounds compose identically in both
+implementations.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from collections import defaultdict, deque
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import controller
+from repro.core.tables import Table
+from repro.runtime.messages import (SHUTDOWN, AckMsg, ClockMarker, ClockMsg,
+                                    DeliverMsg, FullyDelivered, UpdateMsg)
+
+
+class ServerShard:
+    def __init__(self, rt, sid: int):
+        self.rt = rt
+        self.sid = sid
+        self.inbox: queue.Queue = queue.Queue()
+        # master state: one Table per key, holding only this shard's rows
+        self.tables: Dict[str, Table] = {}
+        for key, x0 in rt._x0.items():
+            t = Table(f"{key}@shard{sid}", n_cols=x0.shape[1], dtype=np.float64)
+            for r in rt._shard_rows[key][sid]:
+                t.inc(int(r), x0[r].copy())
+            self.tables[key] = t
+        # strong-VAP: per-key magnitude of half-synchronized updates
+        self.halfsync: Dict[str, np.ndarray] = {
+            key: np.zeros_like(x0) for key, x0 in rt._x0.items()}
+        # uid -> (msg, remaining acks)
+        self.pending: Dict[int, Tuple[UpdateMsg, int]] = {}
+        # per-key FIFO of updates waiting on the strong delivery gate
+        self.queued: Dict[str, deque] = defaultdict(deque)
+        self._last_seq = defaultdict(lambda: -1)   # per origin process
+        self.thread = threading.Thread(
+            target=self._loop, name=f"ps-shard-{sid}", daemon=True)
+
+    # ------------------------------------------------------------------ loop
+    def _loop(self) -> None:
+        while True:
+            msg = self.inbox.get()
+            if msg is SHUTDOWN:
+                self.inbox.task_done()
+                return
+            try:
+                self._handle(msg)
+            except BaseException as e:            # surface into wait()
+                self.rt._record_error(e)
+            finally:
+                self.inbox.task_done()
+                self.rt._msg_done()
+
+    def _handle(self, msg) -> None:
+        rt = self.rt
+        if rt.check:
+            sender = getattr(msg, "process", None)
+            if sender is not None:
+                last = self._last_seq[sender]
+                if msg.seq != last + 1:
+                    rt._violation(f"FIFO violation: proc {sender}->shard "
+                                  f"{self.sid} seq {msg.seq} after {last}")
+                self._last_seq[sender] = msg.seq
+
+        if isinstance(msg, UpdateMsg):
+            self._on_update(msg)
+        elif isinstance(msg, AckMsg):
+            self._on_ack(msg)
+        elif isinstance(msg, ClockMsg):
+            # echo the period-completed marker to every peer.  All of the
+            # process's period-<=clock updates precede this message on the
+            # same FIFO channel, so their DeliverMsgs are already enqueued
+            # ahead of the markers sent here.
+            for q in range(rt.n_proc):
+                if q != msg.process:
+                    rt._send(rt._chan_sp[self.sid][q],
+                             ClockMarker(msg.process, self.sid, msg.clock))
+        else:
+            raise TypeError(f"shard {self.sid}: unexpected message {msg!r}")
+
+    # --------------------------------------------------------------- updates
+    def _on_update(self, msg: UpdateMsg) -> None:
+        rt = self.rt
+        table = self.tables[msg.key]
+        for i, r in enumerate(msg.rows):
+            table.inc(int(r), msg.delta[i])
+        if rt.n_proc == 1:
+            # no peers to propagate to: the update is synchronized already
+            rt._send(rt._chan_sp[self.sid][msg.process],
+                     FullyDelivered(msg.uid, msg.worker, msg.key, msg.rows,
+                                    msg.delta, self.sid))
+            return
+        if self.queued[msg.key] or not controller.strong_delivery_gate(
+                rt.policy, self.halfsync[msg.key][msg.rows], msg.delta):
+            self.queued[msg.key].append(msg)
+            return
+        self._start_delivery(msg)
+
+    def _start_delivery(self, msg: UpdateMsg) -> None:
+        rt = self.rt
+        hs = self.halfsync[msg.key]
+        hs[msg.rows] += np.abs(msg.delta)
+        if rt.check:
+            mx = float(np.max(hs[msg.rows])) if msg.rows.size else 0.0
+            with rt._slock:
+                rt.stats.max_halfsync_mag = max(rt.stats.max_halfsync_mag, mx)
+        n = 0
+        for q in range(rt.n_proc):
+            if q == msg.process:
+                continue
+            rt._send(rt._chan_sp[self.sid][q],
+                     DeliverMsg(msg.uid, msg.worker, msg.process, self.sid,
+                                msg.ts, msg.key, msg.rows, msg.delta))
+            n += 1
+        with rt._slock:
+            rt.stats.n_messages += n
+            rt.stats.bytes_sent += msg.nbytes * n
+        self.pending[msg.uid] = (msg, n)
+
+    def _on_ack(self, ack: AckMsg) -> None:
+        rt = self.rt
+        msg, remaining = self.pending[ack.uid]
+        remaining -= 1
+        if remaining > 0:
+            self.pending[ack.uid] = (msg, remaining)
+            return
+        del self.pending[ack.uid]
+        hs = self.halfsync[msg.key]
+        res = hs[msg.rows] - np.abs(msg.delta)
+        hs[msg.rows] = np.where(np.abs(res) < 1e-12, 0.0, res)
+        rt._send(rt._chan_sp[self.sid][msg.process],
+                 FullyDelivered(msg.uid, msg.worker, msg.key, msg.rows,
+                                msg.delta, self.sid))
+        # freed half-sync budget: release queued deliveries for this key FIFO
+        dq = self.queued.get(msg.key)
+        while dq:
+            nxt = dq[0]
+            if controller.strong_delivery_gate(
+                    rt.policy, self.halfsync[nxt.key][nxt.rows], nxt.delta):
+                dq.popleft()
+                self._start_delivery(nxt)
+            else:
+                break
+
+    # ------------------------------------------------------------- snapshots
+    def rows_snapshot(self, key: str) -> Dict[int, np.ndarray]:
+        """Owned rows of `key` (call only when the runtime is quiesced)."""
+        return {rid: row.get() for rid, row in self.tables[key].rows()}

@@ -1,6 +1,11 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import AsyncPS, NetworkModel, controller, policies, theory
 

@@ -1,0 +1,201 @@
+"""Differential conformance suite: three layers, one spec.
+
+The event-driven simulator (:mod:`repro.core.server`) is the executable
+specification of the paper's consistency models; the threaded runtime
+(:mod:`repro.runtime`) and the SPMD sync layer (:mod:`repro.core.sync`) are
+implementations.  This suite makes them mutually checking:
+
+  (a) deterministic update schedules (integer deltas that depend only on
+      (worker, clock), so float accumulation is exact and order-independent):
+      the quiesced runtime's shard tables and every process cache must equal
+      the simulator's final views element-wise, for every policy;
+  (b) free-running 4-thread stress (>=200 clocks): the runtime's internal
+      mid-run checks — SSP clock bound at every period start, element-wise
+      VAP accumulator bound <= max(u, v_thr) after every Inc, per-channel
+      FIFO, eventual consistency — must record zero violations for SSP(3),
+      VAP, and CVAP;
+  (c) the paper's LDA workload under BSP: log-likelihood trajectories from
+      period-start snapshots are element-wise identical across simulator
+      (barrier-strength network), threaded runtime (barrier_reads), and the
+      SPMD sync layer (integer count deltas are exact in every dtype used).
+"""
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import AsyncPS, NetworkModel, policies
+from repro.runtime import PSRuntime
+
+# ---------------------------------------------------------------------------
+# (a) deterministic schedules: runtime final state == simulator final state
+# ---------------------------------------------------------------------------
+
+
+def _x0():
+    return {"a": np.arange(32, dtype=float).reshape(8, 4) / 2.0,
+            "b": np.ones(5)}
+
+
+def _sched_fn(seed):
+    """Integer deltas, a pure function of (worker, clock) — the deterministic
+    schedule: the update *set* is interleaving-independent, so both backends
+    must converge to exactly x0 + sum(deltas)."""
+    def fn(w, clock, view, rng):
+        r = np.random.default_rng((seed, w, clock))
+        return {"a": r.integers(-3, 4, size=(8, 4)).astype(float),
+                "b": r.integers(-3, 4, size=5).astype(float)}
+    return fn
+
+
+_POLICIES = [
+    ("bsp", policies.bsp()),
+    ("ssp2", policies.ssp(2)),
+    ("cap1", policies.cap(1)),
+    ("vap", policies.vap(4.5)),
+    ("cvap_strong", policies.cvap(2, 4.5, strong=True)),
+]
+
+
+@pytest.mark.parametrize("polname,pol", _POLICIES, ids=[p[0] for p in _POLICIES])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_runtime_final_state_equals_simulator(polname, pol, seed):
+    fn = _sched_fn(seed)
+    sim = AsyncPS(4, pol, _x0(), threads_per_process=2, seed=seed,
+                  network=NetworkModel(seed=seed))
+    st_sim = sim.run(fn, 12)
+    rt = PSRuntime(4, pol, _x0(), n_shards=2, threads_per_process=2,
+                   seed=seed)
+    st_rt = rt.run(fn, 12, timeout=90)
+
+    assert st_sim.violations == [], st_sim.violations
+    assert st_rt.violations == [], st_rt.violations
+    assert st_sim.n_updates == st_rt.n_updates
+    for k, ref in sim.views[0].items():
+        shape = ref.shape
+        # master copy on the hash-partitioned shard tables
+        np.testing.assert_array_equal(
+            rt.master_value(k).reshape(shape), ref,
+            err_msg=f"{polname} seed={seed} master[{k}]")
+        # every process cache converged to the same state (read-my-writes
+        # and deliveries both landed, nothing lost or double-applied)
+        for p in range(rt.n_proc):
+            np.testing.assert_array_equal(
+                rt.view(p)[k].reshape(shape), ref,
+                err_msg=f"{polname} seed={seed} proc{p}[{k}]")
+
+
+# ---------------------------------------------------------------------------
+# (b) randomized interleavings: bounds never violated mid-run
+# ---------------------------------------------------------------------------
+
+
+_STRESS = [
+    ("ssp3", policies.ssp(3)),
+    ("vap", policies.vap(1.5)),
+    ("cvap", policies.cvap(3, 1.5)),
+]
+
+
+@pytest.mark.parametrize("polname,pol", _STRESS, ids=[p[0] for p in _STRESS])
+def test_stress_invariants_hold_mid_run(polname, pol):
+    """4 real threads, 200 clocks, free interleaving.  The runtime checks the
+    clock bound at every period start and the element-wise value bound after
+    every Inc (check_invariants=True), recording violations as they happen —
+    the assertion below is therefore over every intermediate state, not just
+    the final one."""
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(5e-4)    # more thread interleavings per clock
+    try:
+        def fn(w, clock, view, rng):
+            return {"a": rng.normal(0.0, 0.6, size=(8, 4)),
+                    "b": rng.normal(0.0, 0.6, size=5)}
+
+        x0 = {"a": np.zeros((8, 4)), "b": np.zeros(5)}
+        rt = PSRuntime(4, pol, x0, n_shards=2, threads_per_process=2, seed=11)
+        st = rt.run(fn, 200, timeout=110)
+    finally:
+        sys.setswitchinterval(old)
+
+    assert st.violations == [], st.violations[:5]
+    assert st.n_updates == 4 * 200 * 2
+    if pol.clock_bounded:
+        # the bound held...
+        assert st.max_observed_staleness <= pol.staleness
+        # ...and asynchrony actually happened (the check wasn't vacuous)
+        assert st.max_observed_staleness > 0
+    if pol.value_bounded:
+        bound = max(st.max_update_mag, pol.value_bound)
+        assert 0.0 < st.max_unsynced_mag <= bound + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# (c) LDA under BSP: identical trajectories across all three layers
+# ---------------------------------------------------------------------------
+
+
+def test_lda_bsp_trajectories_match_across_layers():
+    from repro.apps import lda
+    from repro.data import synthetic_corpus
+
+    corpus = synthetic_corpus(n_docs=12, vocab_size=24, n_topics=3,
+                              doc_len=15, seed=1)
+    kw = dict(n_topics=3, n_workers=3, n_clocks=4, seed=0)
+    # simulator: delivery latency >> compute spread makes BSP a strict barrier
+    lls_sim = lda.run_lda(
+        corpus, policy=policies.bsp(), backend="sim",
+        network=NetworkModel(base_delay=100.0, jitter=0.0, seed=0),
+        snapshot_trajectory=True, **kw)
+    # threaded runtime: barrier_reads stages fresher-than-guaranteed deliveries
+    lls_rt = lda.run_lda(
+        corpus, policy=policies.bsp(), backend="runtime", barrier_reads=True,
+        threads_per_process=1, n_shards=2, snapshot_trajectory=True, **kw)
+    # SPMD sync layer: BSP = delta all-reduce every step under vmap('data')
+    lls_spmd = lda.run_lda_spmd(corpus, policy=policies.bsp(), **kw)
+
+    assert len(lls_sim) == kw["n_clocks"]
+    np.testing.assert_allclose(lls_rt, lls_sim, rtol=0, atol=1e-9)
+    np.testing.assert_allclose(lls_spmd, lls_sim, rtol=0, atol=1e-9)
+    # and the Gibbs chain is actually sampling (trajectory moves)
+    assert lls_sim[-1] != lls_sim[0]
+
+
+def test_lda_runtime_backend_trains():
+    """LDA runs on the live runtime without conformance scaffolding and the
+    log-likelihood rises (same bar as the simulator's system test)."""
+    from repro.apps import lda
+    from repro.data import synthetic_corpus
+
+    corpus = synthetic_corpus(n_docs=12, vocab_size=30, n_topics=3,
+                              doc_len=20, seed=0)
+    lls, stats = lda.run_lda(corpus, n_topics=3, policy=policies.vap(5.0),
+                             n_workers=4, n_clocks=6, seed=0,
+                             backend="runtime", threads_per_process=2,
+                             n_shards=2, collect_stats=True)
+    assert stats.violations == []
+    assert lls[-1] > lls[0], lls
+
+
+# ---------------------------------------------------------------------------
+# serving: live reads while update traffic is in flight
+# ---------------------------------------------------------------------------
+
+
+def test_live_reads_under_concurrent_updates():
+    def fn(w, clock, view, rng):
+        return {"a": np.ones((8, 4))}
+
+    x0 = {"a": np.zeros((8, 4))}
+    rt = PSRuntime(2, policies.ssp(3), x0, n_shards=2,
+                   threads_per_process=1, seed=0)
+    rt.start(fn, 50, timeout=60)
+    seen = []
+    while rt.running and len(seen) < 1000:
+        v = rt.read("a")                  # a Get() against a live cache
+        assert v.shape == (8, 4)
+        seen.append(float(v.sum()))
+    stats = rt.wait()
+    assert stats.violations == []
+    # reads observed monotone progress (updates are all +1s)
+    assert seen == sorted(seen)
+    assert float(rt.read("a").sum()) == 2 * 50 * 32

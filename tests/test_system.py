@@ -12,6 +12,7 @@ from repro.configs import ConsistencySpec, TrainConfig, reduced_config
 from repro.launch.train import run as train_run
 
 
+@pytest.mark.slow
 def test_e2e_train_loss_decreases():
     cfg = dataclasses.replace(reduced_config("olmo-1b"), dtype="float32")
     tcfg = TrainConfig(arch="olmo-1b", steps=30, lr=2e-3, optimizer="adam",
@@ -22,6 +23,7 @@ def test_e2e_train_loss_decreases():
     assert hist[-1]["loss"] < hist[0]["loss"] - 0.5, hist
 
 
+@pytest.mark.slow
 def test_e2e_consistency_models_all_train():
     cfg = dataclasses.replace(reduced_config("olmo-1b"), dtype="float32")
     finals = {}

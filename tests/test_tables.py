@@ -1,0 +1,104 @@
+"""Unit tests for the Petuum-PS table abstraction (core/tables.py) — the
+storage layer the threaded runtime's server shards are built on."""
+import numpy as np
+import pytest
+
+from repro.core.tables import Row, SparseRow, Table, TableGroup
+
+
+# ---------------------------------------------------------------------------
+# SparseRow zero-elision
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_row_inc_elides_zeros_per_column():
+    r = SparseRow()
+    r.inc(2.5, col=3)
+    assert r.get(3) == 2.5
+    r.inc(-2.5, col=3)                 # back to zero -> entry must vanish
+    assert r.get(3) == 0.0
+    assert 3 not in r.cols
+    assert r.cols == {}
+
+
+def test_sparse_row_inc_elides_zeros_dict_delta():
+    r = SparseRow()
+    r.inc({0: 1.0, 1: -2.0, 5: 4.0})
+    r.inc({0: -1.0, 1: 2.0, 5: 1.0})   # cancels cols 0 and 1 exactly
+    assert r.cols == {5: 5.0}
+    assert r.get() == {5: 5.0}
+    # a delta of zero on a fresh column must not materialize an entry
+    r.inc(0.0, col=7)
+    assert 7 not in r.cols
+
+
+# ---------------------------------------------------------------------------
+# hash partitioning
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_servers", [1, 2, 3, 5])
+def test_server_partition_covers_every_row_exactly_once(n_servers):
+    t = Table("wt", n_cols=4)
+    row_ids = [0, 1, 2, 7, 8, 13, 29, 100]
+    for rid in row_ids:
+        t.inc(rid, np.full(4, float(rid)))
+    parts = [t.server_partition(n_servers, s) for s in range(n_servers)]
+    seen = [rid for p in parts for rid in p]
+    assert sorted(seen) == sorted(row_ids)          # no row lost, none twice
+    for s, p in enumerate(parts):
+        assert all(rid % n_servers == s for rid in p)
+        for rid, row in p.items():                   # partition returns the
+            assert row is t.row(rid)                 # live rows, not copies
+
+
+def test_server_partition_matches_runtime_sharding():
+    """The runtime's shard-row assignment is the same rule as
+    Table.server_partition — one partitioning scheme everywhere."""
+    from repro.runtime import PSRuntime
+    from repro.core import policies
+
+    rt = PSRuntime(2, policies.bsp(), {"a": np.zeros((7, 3))}, n_shards=3)
+    t = Table("a", n_cols=3)
+    for r in range(7):
+        t.inc(r, np.zeros(3))
+    for s in range(3):
+        assert sorted(rt._shard_rows["a"][s].tolist()) == sorted(
+            t.server_partition(3, s))
+
+
+# ---------------------------------------------------------------------------
+# TableGroup
+# ---------------------------------------------------------------------------
+
+
+def test_table_group_duplicate_id_raises():
+    g = TableGroup()
+    g.create("wt", n_cols=8)
+    with pytest.raises(KeyError, match="already exists"):
+        g.create("wt", n_cols=8)
+    # the original table survives the failed create
+    assert "wt" in g
+    assert g["wt"].n_cols == 8
+
+
+def test_table_group_policy_map_and_iteration():
+    g = TableGroup()
+    g.create("wt", n_cols=4, policy="vap")
+    g.create("tc", n_cols=4, sparse=True)
+    assert g.policies == {"wt": "vap"}
+    assert {t.table_id for t in g} == {"wt", "tc"}
+    assert isinstance(g["tc"].row(0), SparseRow)
+    assert isinstance(g["wt"].row(0), Row)
+
+
+def test_dense_snapshot_round_trip_sparse_and_dense():
+    dense = Table("d", n_cols=3)
+    sparse = Table("s", n_cols=3, sparse=True)
+    ref = np.zeros((4, 3))
+    for rid, col, v in [(0, 1, 2.0), (2, 0, -1.5), (3, 2, 4.0)]:
+        dense.row(rid).inc(v, col=col)
+        sparse.inc(rid, v, col=col)
+        ref[rid, col] = v
+    np.testing.assert_array_equal(dense.dense_snapshot(4), ref)
+    np.testing.assert_array_equal(sparse.dense_snapshot(4), ref)
