@@ -1,24 +1,47 @@
-"""Benchmark: the threaded PS runtime — updates/sec and read latency.
+"""Benchmark: the PS runtime — updates/sec and read latency, per transport.
 
-For each consistency policy and worker-thread count, run a fixed number of
-clocks of dense SGD-style update traffic through the real runtime
-(one client process per worker, hash-partitioned shards) while a foreground
-reader hammers Get() against a live process cache.  Reported per
+For each (consistency policy x transport x worker count), run a fixed number
+of clocks of SGD-style update traffic (a small matmul chain per clock, the
+compute:communication ratio of a real worker) through the real runtime while
+a foreground reader hammers Get() against a live view.  Reported per
 configuration:
 
   * updates/sec        — Inc throughput through the full shard pipeline;
   * clocks/sec         — end-to-end period rate (includes controller blocking);
-  * read p50/p95 (us)  — serving-read latency under concurrent update traffic;
+  * read p50/p99 (us)  — serving-read latency under concurrent update traffic
+                         (process cache for threads, locked master shards for
+                         the wire transports);
   * blocked fraction   — share of wall time spent in clock/value gates.
 
-This is the systems half of the paper's claim, measured on real threads:
-relaxing consistency (BSP -> SSP -> VAP) should buy throughput.
+This is the systems half of the paper's claim, measured on real parallelism:
+relaxing consistency (BSP -> SSP -> VAP) buys throughput, and the
+multi-process transports (``proc``/``tcp``) keep scaling past the GIL where
+the threaded backend *collapses* under compute-heavy workers (GIL thrash).
+
+Worker scaling is only meaningful against what the host can physically
+parallelize, so the bench first **calibrates**: it forks two busy numpy
+processes and measures their aggregate throughput vs one
+(``meta.proc_parallel_x2`` in the JSON).  A machine with two real cores
+reports ~2.0 and the proc transport should convert >=1.5x of it into
+updates/s; a container whose "2 CPUs" serialize (some sandboxes report ~1.0)
+caps every transport at ~1x, and the number to read instead is
+proc-vs-queue at the same worker count.
+
+CLI (the CI bench-smoke job runs the tiny config and uploads the JSON):
+
+    PYTHONPATH=src python benchmarks/bench_runtime.py \
+        [--smoke] [--json BENCH_runtime.json] \
+        [--transports queue,proc] [--workers 1,2,4] [--clocks N]
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import platform
 import threading
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -26,18 +49,65 @@ from repro.core import bsp, ssp, vap
 from repro.runtime import PSRuntime
 
 KEYS = {"w": (64, 8), "b": (16,)}
-CLOCKS = 120
+CLOCKS = 60
+# matmul chain length per clock (~5 ms of numpy).  A paper "clock" is a full
+# pass over the worker's data partition, so per-clock compute dwarfs the
+# per-clock update traffic; this keeps the bench at a realistic
+# compute:communication ratio while still finishing in seconds.
+COMPUTE_ITERS = 200
+
+_POLICIES = [("bsp", bsp), ("ssp3", lambda: ssp(3)),
+             ("vap0.05", lambda: vap(0.05))]
+
+
+def calibrate_parallelism(seconds: float = 0.5) -> float:
+    """Aggregate throughput of two forked busy-numpy processes relative to
+    one — the host's physical ceiling for 1->2 process scaling."""
+    import multiprocessing
+
+    def _busy(reps: int) -> float:
+        a = np.ones(500_000)
+        b = np.full(500_000, 0.5)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            np.add(a, b, out=a)
+            np.multiply(a, 0.999, out=a)
+        return time.perf_counter() - t0
+
+    reps = 50
+    while _busy(reps) < seconds / 4:
+        reps *= 2
+    one = min(_busy(reps) for _ in range(2))
+    ctx = multiprocessing.get_context("fork")
+    procs = [ctx.Process(target=_busy, args=(reps,)) for _ in range(2)]
+    t0 = time.perf_counter()
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join()
+    two = time.perf_counter() - t0
+    return 2.0 * one / max(two, 1e-9)
 
 
 def _update_fn(w, clock, view, rng):
-    return {k: rng.normal(0.0, 0.01, size=shape)
-            for k, shape in KEYS.items()}
+    """SGD-flavored worker: read the table, grind a few matmuls, push a
+    bounded delta.  The compute chain is the point — with real work per
+    clock, transport scaling is measured at a realistic compute:comm ratio."""
+    x = view.get("w")                                   # (64, 8) read path
+    g = rng.normal(0.0, 1.0, size=KEYS["w"])
+    m = rng.normal(0.0, 1.0, size=(64, 64)) / 8.0
+    for _ in range(COMPUTE_ITERS):
+        g = m @ g + 0.1 * x
+        g /= max(1.0, float(np.abs(g).max()))
+    return {"w": 0.01 * g,
+            "b": rng.normal(0.0, 0.01, size=KEYS["b"])}
 
 
-def _one(name: str, policy, n_workers: int) -> Dict:
+def _one(name: str, policy, n_workers: int, transport: str,
+         clocks: int) -> Dict:
     x0 = {k: np.zeros(shape) for k, shape in KEYS.items()}
     rt = PSRuntime(n_workers, policy, x0, n_shards=2,
-                   threads_per_process=1, seed=0)
+                   threads_per_process=1, seed=0, transport=transport)
     lat: List[float] = []
     stop = threading.Event()
 
@@ -49,7 +119,7 @@ def _one(name: str, policy, n_workers: int) -> Dict:
             time.sleep(5e-4)
 
     t0 = time.perf_counter()
-    rt.start(_update_fn, CLOCKS, timeout=300)
+    rt.start(_update_fn, clocks, timeout=600)
     th = threading.Thread(target=reader, daemon=True)
     th.start()
     stats = rt.wait()
@@ -57,33 +127,110 @@ def _one(name: str, policy, n_workers: int) -> Dict:
     th.join(timeout=5)
     wall = time.perf_counter() - t0
 
-    q = np.quantile(np.asarray(lat), [0.5, 0.95]) if lat else [0.0, 0.0]
+    q = np.quantile(np.asarray(lat), [0.5, 0.99]) if lat else [0.0, 0.0]
     blocked = (stats.block_time_clock + stats.block_time_value) / (
         max(wall, 1e-9) * n_workers)
     return {
-        "name": f"runtime/{name}/w{n_workers}",
+        "name": f"runtime/{name}/{transport}/w{n_workers}",
+        "policy": name,
+        "transport": transport,
+        "workers": n_workers,
         "us_per_call": wall / max(stats.n_updates, 1) * 1e6,
         "updates_per_s": stats.n_updates / wall,
-        "clocks_per_s": CLOCKS / wall,
+        "clocks_per_s": clocks / wall,
         "read_p50_us": float(q[0]) * 1e6,
-        "read_p95_us": float(q[1]) * 1e6,
+        "read_p99_us": float(q[1]) * 1e6,
         "blocked_frac": blocked,
         "n_reads": len(lat),
     }
 
 
-def run() -> List[Dict]:
+def run(transports: Sequence[str] = ("queue", "proc"),
+        workers: Sequence[int] = (1, 2, 4),
+        clocks: int = CLOCKS,
+        policies=None) -> List[Dict]:
     rows = []
-    for name, policy in [("bsp", bsp()), ("ssp3", ssp(3)),
-                         ("vap0.05", vap(0.05))]:
-        for n in (1, 2, 4):
-            rows.append(_one(name, policy, n))
+    for name, mk in (policies or _POLICIES):
+        for transport in transports:
+            for n in workers:
+                rows.append(_one(name, mk(), n, transport, clocks))
     return rows
 
 
-if __name__ == "__main__":
-    for r in run():
+def write_json(rows: List[Dict], path: str,
+               parallel_x2: Optional[float] = None) -> None:
+    """Consolidated BENCH_runtime.json: the perf trajectory future PRs
+    compare against (updates/s + read p50/p99 per policy x transport x
+    workers, plus the host parallelism calibration)."""
+    out = {
+        "schema": "bench_runtime/v1",
+        "meta": {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "cpus": os.cpu_count(),
+            "proc_parallel_x2": parallel_x2,
+        },
+        "rows": rows,
+    }
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: ssp3 only, 1-2 workers, few clocks")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write consolidated BENCH_runtime.json here")
+    ap.add_argument("--transports", default=None,
+                    help="comma list from queue,tcp,shm,proc")
+    ap.add_argument("--workers", default=None, help="comma list, e.g. 1,2,4")
+    ap.add_argument("--clocks", type=int, default=None)
+    args = ap.parse_args()
+
+    transports = (args.transports.split(",") if args.transports
+                  else ("queue", "proc"))
+    if args.smoke:
+        workers = (1, 2)
+        clocks = args.clocks or 8
+        policies = [("ssp3", lambda: ssp(3))]
+    else:
+        workers = (1, 2, 4)
+        clocks = args.clocks or CLOCKS
+        policies = _POLICIES
+    if args.workers:
+        workers = tuple(int(w) for w in args.workers.split(","))
+
+    cal = calibrate_parallelism()
+    print(f"# host calibration: 2-process aggregate throughput x{cal:.2f} "
+          f"(physical ceiling for 1->2 worker scaling)")
+    rows = run(transports=transports, workers=workers, clocks=clocks,
+               policies=policies)
+    for r in rows:
         print(f"{r['name']}: {r['updates_per_s']:.0f} upd/s, "
               f"{r['clocks_per_s']:.1f} clocks/s, "
-              f"read p50 {r['read_p50_us']:.0f}us p95 {r['read_p95_us']:.0f}us, "
+              f"read p50 {r['read_p50_us']:.0f}us p99 {r['read_p99_us']:.0f}us, "
               f"blocked {r['blocked_frac']*100:.0f}%")
+    pol0 = rows[0]["policy"]
+    per = {(r["transport"], r["workers"]): r["updates_per_s"]
+           for r in rows if r["policy"] == pol0}
+    for transport in transports:
+        if (transport, 1) in per and (transport, 2) in per:
+            x = per[(transport, 2)] / max(per[(transport, 1)], 1e-9)
+            print(f"# {transport}: 1->2 worker scaling x{x:.2f} "
+                  f"(host ceiling x{cal:.2f})")
+    for w in sorted({r["workers"] for r in rows}):
+        if ("proc" in transports and "queue" in transports
+                and (("proc", w) in per and ("queue", w) in per)):
+            print(f"# w{w}: proc vs queue x"
+                  f"{per[('proc', w)] / max(per[('queue', w)], 1e-9):.2f}")
+    if args.json:
+        write_json(rows, args.json, parallel_x2=cal)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -44,11 +44,19 @@ def main() -> None:
         all_rows.append(dict(r))
         print(_csv_line(r))
 
-    print("# --- threaded PS runtime: updates/sec + read latency ---")
+    print("# --- PS runtime: updates/sec + read latency per transport ---")
     from benchmarks import bench_runtime
-    for r in bench_runtime.run():
+    cal = bench_runtime.calibrate_parallelism()
+    print(f"# host calibration: 2-process aggregate x{cal:.2f}")
+    rt_rows = bench_runtime.run()
+    for r in rt_rows:
         all_rows.append(dict(r))
-        print(_csv_line(r))
+        print(_csv_line(dict(r)))
+    rt_out = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "BENCH_runtime.json")
+    os.makedirs(os.path.dirname(rt_out), exist_ok=True)
+    bench_runtime.write_json(rt_rows, rt_out, parallel_x2=cal)
+    print(f"# wrote {rt_out}")
 
     print("# --- kernel reference-path microbenchmarks ---")
     from benchmarks import bench_kernels

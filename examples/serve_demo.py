@@ -3,13 +3,34 @@ ring KV caches — the same prefill/serve steps the multi-pod dry-run lowers.
 
     PYTHONPATH=src python examples/serve_demo.py [--arch gemma2-2b]
 
-With ``--ps``, serve reads from the *live threaded parameter server* instead:
-worker threads stream SGD-style updates through the sharded runtime under a
+With ``--ps``, serve reads from the *live parameter server* instead: workers
+stream SGD-style updates through the sharded runtime under a
 bounded-asynchronous policy while the main thread plays the serving tier,
-issuing Get()s against a process cache and reporting read latency and
-freshness as the table converges.
+issuing Get()s against a live view and reporting read latency and freshness
+as the table converges.
 
     PYTHONPATH=src python examples/serve_demo.py --ps [--policy ssp3]
+
+Running the runtime across processes
+------------------------------------
+
+``--transport`` picks where the client processes live:
+
+* ``queue`` (default) — worker threads inside this interpreter; serving
+  reads hit a client process cache (read-my-writes view).
+* ``proc`` / ``shm`` / ``tcp`` — every client process is a real forked OS
+  process; per-row updates travel as batched multi-row frames over
+  shared-memory rings (``shm``, the ``proc`` default) or loopback sockets
+  (``tcp``), and the GIL no longer couples workers to each other or to the
+  serving tier.  Serving reads then hit the live master shards under
+  per-shard locks (the freshest possible view), and each client ships its
+  final cache back when it finishes.
+
+    PYTHONPATH=src python examples/serve_demo.py --ps --transport proc
+
+The same protocol runs in both regimes — ``tests/test_runtime_conformance``
+holds the final state equal to the event-driven simulator either way — so
+the transport is purely a deployment choice.
 """
 import argparse
 import dataclasses
@@ -36,9 +57,10 @@ def run_ps_demo(args) -> None:
         return {"x": -0.2 * g}
 
     rt = PSRuntime(n_workers, policy, {"x": np.zeros(dim)}, n_shards=2,
-                   threads_per_process=1, seed=0)
+                   threads_per_process=1, seed=0, transport=args.transport)
     print(f"serving from live PS runtime: {n_workers} workers, "
-          f"policy {policy.kind}, {n_clocks} clocks")
+          f"policy {policy.kind}, {n_clocks} clocks, "
+          f"transport {args.transport}")
     rt.start(update_fn, n_clocks, timeout=300)
     lat, t_next = [], time.perf_counter()
     while rt.running:
@@ -70,6 +92,10 @@ def main() -> None:
                     help="serve reads from the live threaded PS runtime")
     ap.add_argument("--policy", default="ssp3",
                     choices=["bsp", "ssp3", "vap", "cvap"])
+    ap.add_argument("--transport", default="queue",
+                    choices=["queue", "proc", "shm", "tcp"],
+                    help="queue = threads in-process; proc/shm/tcp = forked "
+                         "client processes over the wire (see docstring)")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--clocks", type=int, default=150)
     args = ap.parse_args()

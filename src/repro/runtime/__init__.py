@@ -1,18 +1,33 @@
-"""Threaded asynchronous parameter-server runtime (Petuum-PS style).
+"""Asynchronous parameter-server runtime (Petuum-PS style).
 
 Third implementation of the paper's consistency models, alongside the
 event-driven simulator (:mod:`repro.core.server`, the executable spec) and
 the SPMD sync layer (:mod:`repro.core.sync`).  All three share the Policy /
 Consistency Controller split and are differentially tested against each other
 in ``tests/test_runtime_conformance.py``.
+
+Runs worker threads in-process (``transport="queue"``) or real forked
+client processes over loopback sockets / shared-memory rings
+(``transport="tcp" | "shm" | "proc"`` — see :mod:`repro.runtime.transport`),
+with snapshot/restore of the master shard state in
+:mod:`repro.runtime.snapshot`.
 """
 from repro.runtime.messages import (AckMsg, Channel, ClockMarker, ClockMsg,
-                                    DeliverMsg, FullyDelivered, UpdateMsg)
-from repro.runtime.runtime import ClientProcess, PSRuntime, RuntimeViewHandle
+                                    DeliverMsg, FullyDelivered, ProcDoneMsg,
+                                    ShardFinMsg, UpdateMsg)
+from repro.runtime.runtime import (TRANSPORTS, ClientProcess, PSRuntime,
+                                   RuntimeViewHandle)
 from repro.runtime.shard import ServerShard
+from repro.runtime.snapshot import (load_snapshot, save_snapshot,
+                                    snapshot_params, take_snapshot)
+from repro.runtime.transport import (FifoAssert, FrameDecoder, ShmRing,
+                                     WireChannel, encode_frame)
 
 __all__ = [
     "AckMsg", "Channel", "ClientProcess", "ClockMarker", "ClockMsg",
-    "DeliverMsg", "FullyDelivered", "PSRuntime", "RuntimeViewHandle",
-    "ServerShard", "UpdateMsg",
+    "DeliverMsg", "FifoAssert", "FrameDecoder", "FullyDelivered",
+    "PSRuntime", "ProcDoneMsg", "RuntimeViewHandle", "ServerShard",
+    "ShardFinMsg", "ShmRing", "TRANSPORTS", "UpdateMsg", "WireChannel",
+    "encode_frame", "load_snapshot", "save_snapshot", "snapshot_params",
+    "take_snapshot",
 ]

@@ -96,6 +96,25 @@ class FullyDelivered:
 
 
 @dataclass
+class ProcDoneMsg:
+    """Client process finished all its clocks: no more Update/Clock msgs
+    (acks for in-flight deliveries may still follow).  Multi-process quiesce,
+    leg 1: every shard counts these."""
+    process: int
+    seq: int = -1
+
+
+@dataclass
+class ShardFinMsg:
+    """Shard has seen ProcDone from every process and drained its pending
+    and queued deliveries: nothing further will be sent on this channel.
+    Multi-process quiesce, leg 2: a client that has collected the fin of
+    every shard holds its complete final state."""
+    shard: int
+    seq: int = -1
+
+
+@dataclass
 class Channel:
     """FIFO edge into a receiver's inbox, stamping per-channel seq numbers.
 
@@ -114,3 +133,38 @@ class Channel:
             msg.seq = self._seq
             self._seq += 1
             self.inbox.put(msg)
+
+    def send_many(self, msgs) -> None:
+        """Stamp and enqueue a batch atomically w.r.t. other senders."""
+        with self._lock:
+            for m in msgs:
+                m.seq = self._seq
+                self._seq += 1
+                self.inbox.put(m)
+
+
+def group_by_channel(pairs):
+    """[(chan, msg), ...] -> [(chan, [msgs...]), ...], preserving each
+    channel's message order (the unit senders batch into one frame)."""
+    by = {}
+    for chan, msg in pairs:
+        by.setdefault(id(chan), (chan, []))[1].append(msg)
+    return list(by.values())
+
+
+def pump_inbox(inbox: queue.Queue, handle_batch, cap: int = 256) -> None:
+    """Drain an inbox in coalesced batches (shared by shard and client comm
+    loops): block for one message, greedily grab up to ``cap``, hand the
+    batch to ``handle_batch`` (returns True on shutdown), mark all done."""
+    while True:
+        batch = [inbox.get()]
+        try:
+            while len(batch) < cap:
+                batch.append(inbox.get_nowait())
+        except queue.Empty:
+            pass
+        shutdown = handle_batch(batch)
+        for _ in batch:
+            inbox.task_done()
+        if shutdown:
+            return

@@ -1,4 +1,4 @@
-"""Real multi-threaded asynchronous parameter server (DESIGN.md layer 1').
+"""Real asynchronous parameter server (DESIGN.md layer 1').
 
 Where :mod:`repro.core.server` *simulates* the paper's bounded-asynchronous
 semantics in a deterministic event loop, this module *implements* them with
@@ -7,9 +7,9 @@ actual concurrency, in the style of Petuum-PS:
   * N worker threads per client process share a **process cache**
     (read-my-writes: a worker's Incs are visible to its own process
     immediately);
-  * **server shards** (one thread each) own hash-partitioned rows of
-    :class:`repro.core.tables.Table` — row ``r`` of a key lives on shard
-    ``r % n_shards`` — and hold the master copy;
+  * **server shards** (one thread each) own hash-partitioned rows of the
+    master state — row ``r`` of a key lives on shard ``r % n_shards`` — as
+    dense numpy blocks applied with vectorized batch adds;
   * all edges are **FIFO per-channel queues** with sequence numbers the
     receivers assert in check mode;
   * the **Consistency Controller** (:mod:`repro.core.controller`, shared with
@@ -20,12 +20,29 @@ actual concurrency, in the style of Petuum-PS:
   * within a period, updates are applied and sent **largest-magnitude first**
     (paper §4.2); BSP/SSP hold them in a per-worker outbox until Clock().
 
+Transports (``transport=``):
+
+  * ``"queue"`` (default) — every client process is a *thread group* inside
+    this Python process and channels are in-process FIFO queues;
+  * ``"tcp"`` / ``"shm"`` — every client process is a **forked OS process**
+    and channels run over the real wire backends of
+    :mod:`repro.runtime.transport` (loopback sockets / shared-memory rings),
+    with per-row updates coalesced into multi-row frames.  Server shards
+    live in the parent; workers escape the GIL entirely.  ``"proc"`` is an
+    alias for the default multi-process backend (``shm``).
+
+Multi-process quiesce replaces the in-flight counter: clients send
+``ProcDone`` after their last clock, shards answer ``ShardFin`` once their
+delivery state has drained, and each child then ships its final cache,
+stats, and update totals to the parent over a pipe, where they are merged
+and checked exactly like the threaded run.
+
 The simulator stays the executable specification: given the same
 ``update_fn`` both produce the same set of updates, so the quiesced runtime
 state must equal the simulator's final state element-wise (updates are
 additive and commutative).  ``tests/test_runtime_conformance.py`` asserts
-exactly that, plus the clock/value invariants under free thread
-interleavings.
+exactly that — for the threaded *and* the multi-process runtime — plus the
+clock/value invariants under free interleavings.
 
 ``barrier_reads`` (conformance mode, requires ``threads_per_process == 1``):
 peer updates stamped with the reader's current period or later are staged and
@@ -37,10 +54,12 @@ trajectories against the simulator and the SPMD sync layer.
 from __future__ import annotations
 
 import itertools
+import multiprocessing
+import os
 import queue
 import threading
 import time
-from collections import defaultdict
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -48,16 +67,26 @@ import numpy as np
 from repro.core import controller
 from repro.core.policies import Policy
 from repro.core.server import RunStats, UpdateMap
+from repro.runtime import transport as T
 from repro.runtime.messages import (SHUTDOWN, AckMsg, Channel, ClockMarker,
                                     ClockMsg, DeliverMsg, FullyDelivered,
-                                    UpdateMsg)
+                                    ProcDoneMsg, ShardFinMsg, UpdateMsg,
+                                    group_by_channel, pump_inbox)
 from repro.runtime.shard import ServerShard
+
+TRANSPORTS = ("queue", "tcp", "shm", "proc")
+_PROC_ALIAS = "shm"          # what transport="proc" resolves to
 
 
 class ClientProcess:
-    """A client process: shared cache + comm thread for its worker threads."""
+    """A client process: shared cache + comm thread for its worker threads.
 
-    def __init__(self, rt: "PSRuntime", pid: int):
+    Identical in both regimes — under ``transport="queue"`` it lives in the
+    main interpreter; under a wire transport it lives in a forked child and
+    ``rt`` is the child's :class:`_ClientHost`.
+    """
+
+    def __init__(self, rt, pid: int):
         self.rt = rt
         self.pid = pid
         self.cond = threading.Condition()     # guards every field below
@@ -74,7 +103,8 @@ class ClientProcess:
         self.marks = np.full((rt.n_proc, rt.n_shards), -1, dtype=np.int64)
         self.staged: List[DeliverMsg] = []    # barrier_reads holding pen
         self.inbox: queue.Queue = queue.Queue()
-        self._last_seq = defaultdict(lambda: -1)   # per sender shard
+        self._fifo = T.FifoAssert()           # per sender shard
+        self._acks: List[Tuple[Channel, AckMsg]] = []
         self.thread = threading.Thread(
             target=self._loop, name=f"ps-proc-{pid}", daemon=True)
 
@@ -91,50 +121,64 @@ class ClientProcess:
 
     # ---------------------------------------------------------------- comm
     def _loop(self) -> None:
-        while True:
-            msg = self.inbox.get()
-            if msg is SHUTDOWN:
-                self.inbox.task_done()
-                return
-            try:
-                self._handle(msg)
-            except BaseException as e:
-                self.rt._record_error(e)
-            finally:
-                self.inbox.task_done()
-                self.rt._msg_done()
+        pump_inbox(self.inbox, self._handle_batch)
+
+    def _handle_batch(self, batch: list) -> bool:
+        rt = self.rt
+        shutdown = False
+        done = 0
+        with self.cond:
+            for msg in batch:
+                if msg is SHUTDOWN:
+                    shutdown = True
+                    break
+                done += 1
+                try:
+                    self._handle(msg)
+                except BaseException as e:
+                    rt._record_error(e)
+            self.cond.notify_all()
+        # acks leave after the lock is dropped, one frame per shard channel
+        acks, self._acks = self._acks, []
+        for chan, msgs in group_by_channel(acks):
+            rt._send_many(chan, msgs)
+        # in-flight decrements strictly after the acks were enqueued, so the
+        # quiesce wait never observes a transient 0 mid-conversation
+        for _ in range(done):
+            rt._msg_done()
+        return shutdown
 
     def _handle(self, msg) -> None:
+        """Process one message.  Caller holds ``self.cond``."""
         rt = self.rt
-        ack: Optional[Tuple[Channel, AckMsg]] = None
-        with self.cond:
-            if rt.check:
-                last = self._last_seq[msg.shard]
-                if msg.seq != last + 1:
-                    rt._violation(f"FIFO violation: shard {msg.shard}->proc "
-                                  f"{self.pid} seq {msg.seq} after {last}")
-                self._last_seq[msg.shard] = msg.seq
-            if isinstance(msg, DeliverMsg):
-                if rt.barrier_reads and msg.ts >= self.cur_period():
-                    self.staged.append(msg)
-                else:
-                    self._apply_delivery(msg)
-                    ack = (rt._chan_ps[self.pid][msg.shard],
-                           AckMsg(msg.uid, self.pid))
-            elif isinstance(msg, ClockMarker):
-                # max(): the frontier may never regress (channel FIFO already
-                # orders markers per (proc, shard); this makes it local)
-                self.marks[msg.process, msg.shard] = max(
-                    self.marks[msg.process, msg.shard], msg.clock)
-            elif isinstance(msg, FullyDelivered):
-                acc = self.unsynced[msg.worker][msg.key]
-                res = acc[msg.rows] - msg.delta
-                acc[msg.rows] = np.where(np.abs(res) < 1e-12, 0.0, res)
+        if rt.check:
+            err = self._fifo.check(msg.shard, msg.seq)
+            if err:
+                rt._violation(f"FIFO violation: shard {msg.shard}->proc "
+                              f"{self.pid} {err}")
+        if isinstance(msg, DeliverMsg):
+            if rt.barrier_reads and msg.ts >= self.cur_period():
+                self.staged.append(msg)
             else:
-                raise TypeError(f"proc {self.pid}: unexpected message {msg!r}")
-            self.cond.notify_all()
-        if ack is not None:
-            rt._send(*ack)
+                self._apply_delivery(msg)
+                # acks only feed the VAP synchronized-update accounting;
+                # clock-only policies skip the whole ack cycle
+                if rt.policy.value_bounded:
+                    self._acks.append((rt._chan_ps[self.pid][msg.shard],
+                                       AckMsg(msg.uid, self.pid)))
+        elif isinstance(msg, ClockMarker):
+            # max(): the frontier may never regress (channel FIFO already
+            # orders markers per (proc, shard); this makes it local)
+            self.marks[msg.process, msg.shard] = max(
+                self.marks[msg.process, msg.shard], msg.clock)
+        elif isinstance(msg, FullyDelivered):
+            acc = self.unsynced[msg.worker][msg.key]
+            res = acc[msg.rows] - msg.delta
+            acc[msg.rows] = np.where(np.abs(res) < 1e-12, 0.0, res)
+        elif isinstance(msg, ShardFinMsg):
+            rt._on_shard_fin(msg)
+        else:
+            raise TypeError(f"proc {self.pid}: unexpected message {msg!r}")
 
     def _apply_delivery(self, msg: DeliverMsg) -> None:
         self.cache[msg.key][msg.rows] += msg.delta
@@ -149,8 +193,9 @@ class ClientProcess:
         for msg in self.staged:
             if msg.ts < new_period:
                 self._apply_delivery(msg)
-                acks.append((self.rt._chan_ps[self.pid][msg.shard],
-                             AckMsg(msg.uid, self.pid)))
+                if self.rt.policy.value_bounded:
+                    acks.append((self.rt._chan_ps[self.pid][msg.shard],
+                                 AckMsg(msg.uid, self.pid)))
             else:
                 keep.append(msg)
         self.staged = keep
@@ -160,7 +205,7 @@ class ClientProcess:
 class RuntimeViewHandle:
     """Read API handed to update_fn — mirrors the simulator's ViewHandle."""
 
-    def __init__(self, rt: "PSRuntime", proc: ClientProcess, worker: int):
+    def __init__(self, rt, proc: ClientProcess, worker: int):
         self._rt = rt
         self._proc = proc
         self.worker = worker
@@ -176,169 +221,15 @@ class RuntimeViewHandle:
         return list(self._rt._x0.keys())
 
 
-class PSRuntime:
-    """The threaded asynchronous parameter server.
-
-    Drop-in counterpart of :class:`repro.core.server.AsyncPS` — same
-    ``update_fn(worker, clock, view, rng)`` contract, same per-worker rng
-    seeding, same :class:`RunStats` — but wall-clock concurrent instead of
-    simulated.  ``NetworkModel`` / ``compute_time`` / ``straggler`` have no
-    analogue here: latency and skew are real.
+class _WorkerFlowMixin:
+    """The client-side worker flow, shared by the in-process runtime
+    (:class:`PSRuntime`, transport="queue") and the forked per-process host
+    (:class:`_ClientHost`, wire transports).  Subclasses provide the state
+    surface: ``procs``, ``policy``, ``stats``, ``_slock``, ``_total``,
+    ``_chan_ps``, ``_send``/``_send_many``/``_msg_done``, ``_next_uid``,
+    ``_check_alive``, ``_violation``, ``_record_error``,
+    ``_note_global_clock`` and the sizing/config attributes.
     """
-
-    def __init__(self, n_workers: int, policy: Policy,
-                 init_params: UpdateMap,
-                 n_shards: int = 2,
-                 threads_per_process: int = 1,
-                 seed: int = 0,
-                 prioritize_by_magnitude: bool = True,
-                 check_invariants: bool = True,
-                 barrier_reads: bool = False):
-        if n_workers % threads_per_process:
-            raise ValueError("n_workers must divide into processes evenly")
-        if n_shards < 1:
-            raise ValueError("need at least one server shard")
-        if barrier_reads and threads_per_process != 1:
-            raise ValueError("barrier_reads requires threads_per_process == 1")
-        self.P = n_workers
-        self.tpp = threads_per_process
-        self.n_proc = n_workers // threads_per_process
-        self.n_shards = n_shards
-        self.policy = policy
-        self.seed = seed
-        self.prioritize = prioritize_by_magnitude
-        self.check = check_invariants
-        self.barrier_reads = barrier_reads
-
-        # canonical (R, C) float64 master shapes; original shapes for reads
-        self._shapes: Dict[str, Tuple[int, ...]] = {}
-        self._x0: Dict[str, np.ndarray] = {}
-        self._shard_rows: Dict[str, List[np.ndarray]] = {}
-        for key, v in init_params.items():
-            a = np.asarray(v, dtype=np.float64)
-            self._shapes[key] = a.shape
-            flat = a.reshape(a.shape[0], -1) if a.ndim > 1 else a.reshape(-1, 1)
-            self._x0[key] = flat.copy()
-            rows = np.arange(flat.shape[0])
-            self._shard_rows[key] = [rows[rows % n_shards == s]
-                                     for s in range(n_shards)]
-
-        self.stats = RunStats()
-        self._slock = threading.Lock()
-        self._total = {k: np.zeros_like(v) for k, v in self._x0.items()}
-        self._uid = itertools.count()
-        self._done_clock = 0
-        self._t0 = 0.0
-        self._deadline = float("inf")
-        self._errors: List[BaseException] = []
-        self._qcond = threading.Condition()   # guards _inflight
-        self._inflight = 0
-
-        self.shards = [ServerShard(self, s) for s in range(n_shards)]
-        self.procs = [ClientProcess(self, p) for p in range(self.n_proc)]
-        # FIFO channels: client process -> shard, shard -> client process
-        self._chan_ps = [[Channel(f"p{p}->s{s}", self.shards[s].inbox)
-                          for s in range(n_shards)] for p in range(self.n_proc)]
-        self._chan_sp = [[Channel(f"s{s}->p{p}", self.procs[p].inbox)
-                          for p in range(self.n_proc)] for s in range(n_shards)]
-
-        self.update_fn: Optional[Callable] = None
-        self.n_clocks = 0
-        self._workers: List[threading.Thread] = []
-        self._started = False
-        self._finished = False
-
-    # ------------------------------------------------------------- plumbing
-    def proc_of(self, worker: int) -> int:
-        return worker // self.tpp
-
-    def _send(self, chan: Channel, msg) -> None:
-        with self._qcond:
-            self._inflight += 1
-        chan.send(msg)
-
-    def _msg_done(self) -> None:
-        with self._qcond:
-            self._inflight -= 1
-            if self._inflight == 0:
-                self._qcond.notify_all()
-
-    def _violation(self, text: str) -> None:
-        with self._slock:
-            self.stats.violations.append(text)
-
-    def _record_error(self, e: BaseException) -> None:
-        with self._slock:
-            self._errors.append(e)
-
-    def _check_alive(self) -> None:
-        if time.monotonic() > self._deadline:
-            raise RuntimeError(
-                "runtime deadlock: wall-clock deadline exceeded "
-                f"(inflight={self._inflight})")
-        if self._errors:
-            raise RuntimeError("runtime aborted: peer thread failed")
-
-    # ---------------------------------------------------------------- running
-    def start(self, update_fn: Callable, n_clocks: int,
-              timeout: float = 120.0) -> None:
-        """Launch shard/comm/worker threads; pair with :meth:`wait`."""
-        if self._started:
-            raise RuntimeError("runtime already started")
-        self._started = True
-        self.update_fn = update_fn
-        self.n_clocks = n_clocks
-        self._deadline = time.monotonic() + timeout
-        self._t0 = time.monotonic()
-        for s in self.shards:
-            s.thread.start()
-        for p in self.procs:
-            p.thread.start()
-        self._workers = [threading.Thread(target=self._worker_loop, args=(w,),
-                                          name=f"ps-worker-{w}", daemon=True)
-                         for w in range(self.P)]
-        for t in self._workers:
-            t.start()
-
-    def wait(self) -> RunStats:
-        """Join workers, quiesce all in-flight messages, run final checks."""
-        if not self._started or self._finished:
-            raise RuntimeError("runtime not running")
-        for t in self._workers:
-            while t.is_alive():
-                t.join(timeout=0.5)
-                if time.monotonic() > self._deadline:
-                    self._record_error(RuntimeError(
-                        f"worker {t.name} still alive at deadline"))
-                    break
-        if not self._errors:
-            with self._qcond:
-                while self._inflight > 0:
-                    if time.monotonic() > self._deadline:
-                        self._record_error(RuntimeError(
-                            f"quiesce timed out ({self._inflight} in flight)"))
-                        break
-                    self._qcond.wait(0.25)
-        self._finished = True
-        for p in self.procs:
-            p.inbox.put(SHUTDOWN)
-        for s in self.shards:
-            s.inbox.put(SHUTDOWN)
-        for th in [p.thread for p in self.procs] + [s.thread for s in self.shards]:
-            th.join(timeout=5.0)
-        self.stats.sim_time = time.monotonic() - self._t0
-        if self._errors:
-            raise RuntimeError(
-                f"runtime failed: {self._errors[0]!r}") from self._errors[0]
-        if self.check:
-            self._final_checks()
-        return self.stats
-
-    def run(self, update_fn: Callable, n_clocks: int,
-            timeout: float = 120.0) -> RunStats:
-        """Run every worker for ``n_clocks`` periods (start + wait)."""
-        self.start(update_fn, n_clocks, timeout=timeout)
-        return self.wait()
 
     # ------------------------------------------------------------ worker flow
     def _worker_loop(self, w: int) -> None:
@@ -356,14 +247,22 @@ class PSRuntime:
                 outbox: List[Tuple[Channel, UpdateMsg]] = []
                 for key, delta in items:
                     sends = self._apply_update(w, clock, proc, key, delta)
-                    if self.policy.push_at_clock_only:
-                        outbox.extend(sends)
-                    else:
-                        for chan, msg in sends:
-                            self._send(chan, msg)
+                    outbox.extend(sends)
+                if not self.policy.push_at_clock_only:
+                    # async policies push without waiting for Clock(): one
+                    # coalesced multi-row frame per shard channel per period
+                    # (PR 1 pushed per Inc; the update *set* and all bounds
+                    # are unchanged, only send timing within a period)
+                    self._flush_outbox(outbox)
+                    outbox = []
                 self._on_clock(w, proc, outbox)
         except BaseException as e:
             self._record_error(e)
+
+    def _flush_outbox(self, outbox: List[Tuple[Channel, UpdateMsg]]) -> None:
+        """Send grouped per channel: one frame per channel, FIFO preserved."""
+        for chan, msgs in group_by_channel(outbox):
+            self._send_many(chan, msgs)
 
     def _clock_gate(self, w: int, clock: int, proc: ClientProcess) -> None:
         """Block until the delivery frontier admits this period (clock bound)."""
@@ -439,16 +338,19 @@ class PSRuntime:
                 rows, part = rows[nz], part[nz]
                 if rows.size == 0:
                     continue
-            msg = UpdateMsg(next(self._uid), w, proc.pid, clock, key,
-                            rows, part.copy())
+            msg = UpdateMsg(self._next_uid(), w, proc.pid, clock, key,
+                            np.ascontiguousarray(rows), part.copy())
             sends.append((self._chan_ps[proc.pid][s], msg))
         return sends
 
     def _on_clock(self, w: int, proc: ClientProcess,
                   outbox: List[Tuple[Channel, UpdateMsg]]) -> None:
         """Clock(): flush the SSP outbox, tick, maybe advance the process."""
-        for chan, msg in outbox:        # before the tick, matching the sim
-            self._send(chan, msg)
+        # held updates must hit the channels *before* the tick (matching the
+        # sim): a sibling worker's tick may advance the process clock, and
+        # its ClockMsg for this period must be FIFO-after these updates —
+        # the shard's marker echo relies on exactly that channel order
+        self._flush_outbox(outbox)
         advanced: List[int] = []
         staged_acks: List[Tuple[Channel, AckMsg]] = []
         with proc.cond:
@@ -460,13 +362,368 @@ class PSRuntime:
             if advanced and self.barrier_reads:
                 staged_acks = proc.release_staged(new_min)
             proc.cond.notify_all()
-        for c in advanced:
-            for s in range(self.n_shards):
-                self._send(self._chan_ps[proc.pid][s], ClockMsg(proc.pid, c))
+        pairs = [(self._chan_ps[proc.pid][s], ClockMsg(proc.pid, c))
+                 for c in advanced for s in range(self.n_shards)]
+        for chan, msgs in group_by_channel(pairs):
+            self._send_many(chan, msgs)
         for chan, msg in staged_acks:
             self._send(chan, msg)
         if advanced:
             self._note_global_clock()
+
+
+class PSRuntime(_WorkerFlowMixin):
+    """The concurrent asynchronous parameter server.
+
+    Drop-in counterpart of :class:`repro.core.server.AsyncPS` — same
+    ``update_fn(worker, clock, view, rng)`` contract, same per-worker rng
+    seeding, same :class:`RunStats` — but wall-clock concurrent instead of
+    simulated.  ``NetworkModel`` / ``compute_time`` / ``straggler`` have no
+    analogue here: latency and skew are real.
+
+    ``transport="queue"`` runs worker *threads* in this process;
+    ``"tcp"``/``"shm"``/``"proc"`` fork one OS process per client process
+    and carry the same message protocol over the wire (see module docstring).
+    """
+
+    def __init__(self, n_workers: int, policy: Policy,
+                 init_params: UpdateMap,
+                 n_shards: int = 2,
+                 threads_per_process: int = 1,
+                 seed: int = 0,
+                 prioritize_by_magnitude: bool = True,
+                 check_invariants: bool = True,
+                 barrier_reads: bool = False,
+                 transport: str = "queue",
+                 restore_from: Optional[dict] = None):
+        if n_workers % threads_per_process:
+            raise ValueError("n_workers must divide into processes evenly")
+        if n_shards < 1:
+            raise ValueError("need at least one server shard")
+        if barrier_reads and threads_per_process != 1:
+            raise ValueError("barrier_reads requires threads_per_process == 1")
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}; "
+                             f"choose from {TRANSPORTS}")
+        self.transport_kind = _PROC_ALIAS if transport == "proc" else transport
+        self._proc_mode = self.transport_kind != "queue"
+        self.P = n_workers
+        self.tpp = threads_per_process
+        self.n_proc = n_workers // threads_per_process
+        self.n_shards = n_shards
+        self.policy = policy
+        self.seed = seed
+        self.prioritize = prioritize_by_magnitude
+        self.check = check_invariants
+        self.barrier_reads = barrier_reads
+
+        # canonical (R, C) float64 master shapes; original shapes for reads
+        self._shapes: Dict[str, Tuple[int, ...]] = {}
+        self._x0: Dict[str, np.ndarray] = {}
+        self._shard_rows: Dict[str, List[np.ndarray]] = {}
+        for key, v in init_params.items():
+            a = np.asarray(v, dtype=np.float64)
+            self._shapes[key] = a.shape
+            flat = a.reshape(a.shape[0], -1) if a.ndim > 1 else a.reshape(-1, 1)
+            self._x0[key] = flat.copy()
+            rows = np.arange(flat.shape[0])
+            self._shard_rows[key] = [rows[rows % n_shards == s]
+                                     for s in range(n_shards)]
+
+        self.stats = RunStats()
+        self._slock = threading.Lock()
+        self._total = {k: np.zeros_like(v) for k, v in self._x0.items()}
+        self._uid = itertools.count()
+        self._done_clock = 0
+        self._t0 = 0.0
+        self._deadline = float("inf")
+        self._errors: List[BaseException] = []
+        self._qcond = threading.Condition()   # guards _inflight (queue mode)
+        self._inflight = 0
+
+        self.shards = [ServerShard(self, s) for s in range(n_shards)]
+        if restore_from is not None:
+            from repro.runtime.snapshot import restore_into
+            restore_into(self, restore_from)
+        if self._proc_mode:
+            self.procs: List[ClientProcess] = []
+            self._chan_ps = None              # lives in the children
+            self._chan_sp: List[List] = []    # wire channels, built in start()
+            self._children: List[multiprocessing.Process] = []
+            self._pipes: List = []
+            self._readers: List[threading.Thread] = []
+            self._transport = None
+            self._final_caches: Dict[int, Dict[str, np.ndarray]] = {}
+        else:
+            self.procs = [ClientProcess(self, p) for p in range(self.n_proc)]
+            # FIFO channels: client process -> shard, shard -> client process
+            self._chan_ps = [[Channel(f"p{p}->s{s}", self.shards[s].inbox)
+                              for s in range(n_shards)]
+                             for p in range(self.n_proc)]
+            self._chan_sp = [[Channel(f"s{s}->p{p}", self.procs[p].inbox)
+                              for p in range(self.n_proc)]
+                             for s in range(n_shards)]
+
+        self.update_fn: Optional[Callable] = None
+        self.n_clocks = 0
+        self._workers: List[threading.Thread] = []
+        self._started = False
+        self._finished = False
+
+    # ------------------------------------------------------------- plumbing
+    def proc_of(self, worker: int) -> int:
+        return worker // self.tpp
+
+    def _next_uid(self) -> int:
+        return next(self._uid)
+
+    def _send(self, chan, msg) -> None:
+        if not self._proc_mode:
+            with self._qcond:
+                self._inflight += 1
+        chan.send(msg)
+
+    def _send_many(self, chan, msgs: list) -> None:
+        if not msgs:
+            return
+        if not self._proc_mode:
+            with self._qcond:
+                self._inflight += len(msgs)
+        chan.send_many(msgs)
+
+    def _msg_done(self) -> None:
+        if self._proc_mode:
+            return
+        with self._qcond:
+            self._inflight -= 1
+            if self._inflight == 0:
+                self._qcond.notify_all()
+
+    def _violation(self, text: str) -> None:
+        with self._slock:
+            self.stats.violations.append(text)
+
+    def _record_error(self, e: BaseException) -> None:
+        with self._slock:
+            self._errors.append(e)
+
+    def _check_alive(self) -> None:
+        if time.monotonic() > self._deadline:
+            raise RuntimeError(
+                "runtime deadlock: wall-clock deadline exceeded "
+                f"(inflight={self._inflight})")
+        if self._errors:
+            raise RuntimeError("runtime aborted: peer thread failed")
+
+    # ---------------------------------------------------------------- running
+    def start(self, update_fn: Callable, n_clocks: int,
+              timeout: float = 120.0) -> None:
+        """Launch shard/comm/worker threads (and, under a wire transport,
+        the client OS processes); pair with :meth:`wait`."""
+        if self._started:
+            raise RuntimeError("runtime already started")
+        self._started = True
+        self.update_fn = update_fn
+        self.n_clocks = n_clocks
+        self._deadline = time.monotonic() + timeout
+        self._t0 = time.monotonic()
+        if self._proc_mode:
+            self._start_proc()
+            return
+        for s in self.shards:
+            s.thread.start()
+        for p in self.procs:
+            p.thread.start()
+        self._workers = [threading.Thread(target=self._worker_loop, args=(w,),
+                                          name=f"ps-worker-{w}", daemon=True)
+                         for w in range(self.P)]
+        for t in self._workers:
+            t.start()
+
+    # ------------------------------------------------------- proc-mode start
+    def _start_proc(self) -> None:
+        ctx = multiprocessing.get_context("fork")
+        if self.transport_kind == "tcp":
+            self._transport = T.TcpTransport(self.n_proc, self.n_shards)
+            self._transport.listen()
+        else:
+            # ring must hold the largest possible single row part (a whole
+            # key) with frame overhead; batches above half the ring split
+            # into multiple frames (WireChannel max_frame)
+            max_part = max(v.nbytes + 8 * v.shape[0] + 4096
+                           for v in self._x0.values())
+            cap = max(1 << 20, 8 * max_part)
+            self._shm_max_frame = cap // 2
+            self._transport = T.ShmTransport(self.n_proc, self.n_shards,
+                                             capacity=cap)
+        for pid in range(self.n_proc):
+            recv, send = ctx.Pipe(duplex=False)
+            with warnings.catch_warnings():
+                # jax registers an at-fork warning about its worker threads;
+                # the children never touch jax (numpy-only worker flow)
+                warnings.simplefilter("ignore", RuntimeWarning)
+                child = ctx.Process(target=_client_child_main,
+                                    args=(self, pid, send),
+                                    name=f"ps-client-{pid}", daemon=True)
+                child.start()
+            send.close()                       # parent keeps the read end
+            self._children.append(child)
+            self._pipes.append(recv)
+
+        def on_reader_error(e: BaseException) -> None:
+            self._record_error(e)
+
+        # parent side: route each client->shard stream into the shard inbox,
+        # hand each shard a write channel back to every client
+        self._chan_sp = [[None] * self.n_proc for _ in range(self.n_shards)]
+        if self.transport_kind == "tcp":
+            conns = self._transport.accept_all(self._deadline)
+            self._conns = conns
+            for (p, s), conn in conns.items():
+                self._chan_sp[s][p] = T.WireChannel(f"s{s}->p{p}", conn.write)
+                self._readers.append(T.start_reader(
+                    f"rx-p{p}s{s}", conn.read_chunk, self.shards[s].inbox,
+                    on_reader_error))
+        else:
+            self._reader_stop = threading.Event()
+            for (p, s), edge in self._transport.edges.items():
+                self._chan_sp[s][p] = T.WireChannel(
+                    f"s{s}->p{p}",
+                    T.ring_writer(edge.s2c, edge.s2c_bell[1], self._deadline),
+                    max_frame=self._shm_max_frame)
+                self._readers.append(T.start_reader(
+                    f"rx-p{p}s{s}",
+                    T.ring_reader(edge.c2s, edge.c2s_bell[0],
+                                  self._reader_stop),
+                    self.shards[s].inbox, on_reader_error))
+        for s in self.shards:
+            s.thread.start()
+
+    def wait(self) -> RunStats:
+        """Join workers, quiesce all in-flight messages, run final checks."""
+        if not self._started or self._finished:
+            raise RuntimeError("runtime not running")
+        if self._proc_mode:
+            return self._wait_proc()
+        for t in self._workers:
+            while t.is_alive():
+                t.join(timeout=0.5)
+                if time.monotonic() > self._deadline:
+                    self._record_error(RuntimeError(
+                        f"worker {t.name} still alive at deadline"))
+                    break
+        if not self._errors:
+            with self._qcond:
+                while self._inflight > 0:
+                    if time.monotonic() > self._deadline:
+                        self._record_error(RuntimeError(
+                            f"quiesce timed out ({self._inflight} in flight)"))
+                        break
+                    self._qcond.wait(0.25)
+        self._finished = True
+        for p in self.procs:
+            p.inbox.put(SHUTDOWN)
+        for s in self.shards:
+            s.inbox.put(SHUTDOWN)
+        for th in [p.thread for p in self.procs] + [s.thread for s in self.shards]:
+            th.join(timeout=5.0)
+        self.stats.sim_time = time.monotonic() - self._t0
+        if self._errors:
+            raise RuntimeError(
+                f"runtime failed: {self._errors[0]!r}") from self._errors[0]
+        if self.check:
+            self._final_checks()
+        return self.stats
+
+    # -------------------------------------------------------- proc-mode wait
+    def _wait_proc(self) -> RunStats:
+        finals: Dict[int, dict] = {}
+        try:
+            for pid, pipe in enumerate(self._pipes):
+                budget = max(0.1, self._deadline - time.monotonic())
+                if pipe.poll(budget):
+                    try:
+                        finals[pid] = pipe.recv()
+                    except EOFError:
+                        pass
+            for child in self._children:
+                child.join(timeout=max(0.1, self._deadline - time.monotonic()))
+                if child.is_alive():
+                    child.terminate()
+                    child.join(timeout=5.0)
+                    self._record_error(RuntimeError(
+                        f"client process {child.name} killed at deadline"))
+            for pid, child in enumerate(self._children):
+                if pid not in finals:
+                    # exitcode read after the join above, so the diagnostic
+                    # reflects how the child actually ended
+                    self._record_error(RuntimeError(
+                        f"client process {pid} sent no final state "
+                        f"(exitcode={child.exitcode})"))
+            # children exited => their EOF frames are on the wire; readers
+            # drain them into the shard inboxes and stop
+            for r in self._readers:
+                r.join(timeout=max(0.1, self._deadline - time.monotonic()) + 5)
+            for s in self.shards:
+                s.inbox.put(SHUTDOWN)
+            for s in self.shards:
+                s.thread.join(timeout=5.0)
+        finally:
+            self._finished = True
+            self._cleanup_transport()
+        self._merge_finals(finals)
+        self.stats.sim_time = time.monotonic() - self._t0
+        if self._errors:
+            raise RuntimeError(
+                f"runtime failed: {self._errors[0]!r}") from self._errors[0]
+        if self.check:
+            self._final_checks()
+        return self.stats
+
+    def _cleanup_transport(self) -> None:
+        if self.transport_kind == "tcp":
+            self._transport.close_listener()
+            for conn in getattr(self, "_conns", {}).values():
+                conn.close()
+        elif self._transport is not None:
+            if hasattr(self, "_reader_stop"):
+                self._reader_stop.set()
+            self._transport.close(unlink=True)
+        self._transport = None
+
+    def _merge_finals(self, finals: Dict[int, dict]) -> None:
+        clock_times: List[List[float]] = []
+        for pid, fin in sorted(finals.items()):
+            st: RunStats = fin["stats"]
+            for err in fin["errors"]:
+                self._errors.append(RuntimeError(f"client {pid}: {err}"))
+            self.stats.n_updates += st.n_updates
+            self.stats.block_time_clock += st.block_time_clock
+            self.stats.block_time_value += st.block_time_value
+            self.stats.max_observed_staleness = max(
+                self.stats.max_observed_staleness, st.max_observed_staleness)
+            self.stats.max_unsynced_mag = max(
+                self.stats.max_unsynced_mag, st.max_unsynced_mag)
+            self.stats.max_update_mag = max(
+                self.stats.max_update_mag, st.max_update_mag)
+            self.stats.violations.extend(st.violations)
+            for k, v in fin["total"].items():
+                self._total[k] += v
+            self._final_caches[pid] = fin["cache"]
+            clock_times.append(st.clock_times)
+        if clock_times and all(clock_times):
+            n = min(len(c) for c in clock_times)
+            self.stats.clock_times = [
+                max(c[i] for c in clock_times) for i in range(n)]
+
+    def _on_shard_fin(self, msg: ShardFinMsg) -> None:
+        raise TypeError("ShardFin must not reach the in-process runtime")
+
+    def run(self, update_fn: Callable, n_clocks: int,
+            timeout: float = 120.0) -> RunStats:
+        """Run every worker for ``n_clocks`` periods (start + wait)."""
+        self.start(update_fn, n_clocks, timeout=timeout)
+        return self.wait()
 
     def _note_global_clock(self) -> None:
         done = min(p.sent_clock for p in self.procs)
@@ -477,13 +734,23 @@ class PSRuntime:
 
     @property
     def running(self) -> bool:
-        """True while worker threads are still producing updates."""
-        return (self._started and not self._finished
-                and any(t.is_alive() for t in self._workers))
+        """True while workers are still producing updates."""
+        if self._finished or not self._started:
+            return False
+        if self._proc_mode:
+            return any(c.is_alive() for c in self._children)
+        return any(t.is_alive() for t in self._workers)
 
     # ------------------------------------------------------------- reads
     def read(self, key: str, process: int = 0) -> np.ndarray:
-        """Serving read: a Get() against a live process cache."""
+        """Serving read: a Get() against a live process cache (threaded
+        mode), or against the live master shards / the final shipped cache
+        (multi-process mode, where peer caches live in other processes)."""
+        if self._proc_mode:
+            if self._finished and self._final_caches:
+                return self._final_caches[process][key].copy().reshape(
+                    self._shapes[key])
+            return self.master_value(key)
         proc = self.procs[process]
         with proc.cond:
             flat = proc.cache[key].copy()
@@ -492,27 +759,42 @@ class PSRuntime:
     def master_value(self, key: str) -> np.ndarray:
         """Assemble the authoritative value from the shard tables.
 
-        Only meaningful once the runtime is quiesced (after :meth:`wait`).
+        Exact once the runtime is quiesced (after :meth:`wait`); mid-run it
+        is a live, per-shard-locked read of the master blocks.
         """
         out = np.zeros_like(self._x0[key])
         for shard in self.shards:
-            for rid, row in shard.rows_snapshot(key).items():
-                out[rid] = row
+            shard.read_rows(key, out)
         return out.reshape(self._shapes[key])
 
     def view(self, process: int) -> Dict[str, np.ndarray]:
         """A process cache as {key: array in the original shape}."""
+        if self._proc_mode:
+            if not self._finished:
+                raise RuntimeError("multi-process caches are only shipped "
+                                   "back at wait(); use read() mid-run")
+            cache = self._final_caches[process]
+            return {k: v.copy().reshape(self._shapes[k])
+                    for k, v in cache.items()}
         proc = self.procs[process]
         with proc.cond:
             return {k: v.copy().reshape(self._shapes[k])
                     for k, v in proc.cache.items()}
 
+    # ------------------------------------------------------------- snapshots
+    def snapshot(self) -> dict:
+        """Master shard state as a restorable snapshot (see
+        :mod:`repro.runtime.snapshot`)."""
+        from repro.runtime.snapshot import take_snapshot
+        return take_snapshot(self)
+
     # ------------------------------------------------------------- checks
     def _final_checks(self) -> None:
         """Eventual consistency: caches and master equal x0 + sum(updates)."""
         expected = {k: self._x0[k] + self._total[k] for k in self._x0}
-        for p in range(self.n_proc):
-            cache = self.procs[p].cache
+        caches = (self._final_caches.items() if self._proc_mode
+                  else ((p, self.procs[p].cache) for p in range(self.n_proc)))
+        for p, cache in caches:
             for k in self._x0:
                 if not np.allclose(cache[k], expected[k], atol=1e-6):
                     self._violation(
@@ -522,3 +804,179 @@ class PSRuntime:
             if not np.allclose(master, expected[k], atol=1e-6):
                 self._violation(
                     f"eventual-consistency violation on {k} (shard tables)")
+
+
+# ---------------------------------------------------------------------------
+# forked client process (wire transports)
+# ---------------------------------------------------------------------------
+
+
+class _ClientHost(_WorkerFlowMixin):
+    """Child-side runtime facade: owns one :class:`ClientProcess`, its
+    worker threads, and the wire channels to every shard.  Mirrors the
+    attribute surface :class:`_WorkerFlowMixin` and :class:`ClientProcess`
+    expect from ``rt``."""
+
+    def __init__(self, rt: PSRuntime, pid: int):
+        self.pid = pid
+        self.policy = rt.policy
+        self.seed = rt.seed
+        self.check = rt.check
+        self.barrier_reads = rt.barrier_reads
+        self.prioritize = rt.prioritize
+        self.n_shards = rt.n_shards
+        self.n_proc = rt.n_proc
+        self.tpp = rt.tpp
+        self.update_fn = rt.update_fn
+        self.n_clocks = rt.n_clocks
+        self._deadline = rt._deadline
+        self._x0 = rt._x0
+        self._shapes = rt._shapes
+        self._shard_rows = rt._shard_rows
+        self._t0 = time.monotonic()
+
+        self.stats = RunStats()
+        self._slock = threading.Lock()
+        self._total = {k: np.zeros_like(v) for k, v in self._x0.items()}
+        # globally unique uids without cross-process coordination
+        self._uid = itertools.count(pid, rt.n_proc)
+        self._errors: List[BaseException] = []
+        self._fins: set = set()
+        self._all_fins = threading.Event()
+
+        self.proc = ClientProcess(self, pid)
+        self.procs = {pid: self.proc}
+        self._readers: List[threading.Thread] = []
+        self._channels: List[T.WireChannel] = []
+        if rt.transport_kind == "tcp":
+            self._conns = rt._transport.connect(pid)
+            chans = []
+            for s in range(rt.n_shards):
+                conn = self._conns[s]
+                chans.append(T.WireChannel(f"p{pid}->s{s}", conn.write))
+                self._readers.append(T.start_reader(
+                    f"rx-s{s}", conn.read_chunk, self.proc.inbox,
+                    self._record_error))
+        else:
+            self._stop = threading.Event()
+            chans = []
+            for s in range(rt.n_shards):
+                edge = rt._transport.edges[(pid, s)]
+                chans.append(T.WireChannel(
+                    f"p{pid}->s{s}",
+                    T.ring_writer(edge.c2s, edge.c2s_bell[1],
+                                  self._deadline),
+                    max_frame=rt._shm_max_frame))
+                self._readers.append(T.start_reader(
+                    f"rx-s{s}", T.ring_reader(edge.s2c, edge.s2c_bell[0],
+                                              self._stop),
+                    self.proc.inbox, self._record_error))
+        self._channels = chans
+        self._chan_ps = {pid: chans}
+
+    # ---------------------------------------------------------- rt interface
+    def proc_of(self, worker: int) -> int:
+        return self.pid
+
+    def _next_uid(self) -> int:
+        return next(self._uid)
+
+    def _send(self, chan, msg) -> None:
+        chan.send(msg)
+
+    def _send_many(self, chan, msgs: list) -> None:
+        if msgs:
+            chan.send_many(msgs)
+
+    def _msg_done(self) -> None:
+        pass
+
+    def _violation(self, text: str) -> None:
+        with self._slock:
+            self.stats.violations.append(text)
+
+    def _record_error(self, e: BaseException) -> None:
+        with self._slock:
+            self._errors.append(e)
+
+    def _check_alive(self) -> None:
+        if time.monotonic() > self._deadline:
+            raise RuntimeError("client deadline exceeded (gate stuck)")
+        if self._errors:
+            raise RuntimeError("client aborted: peer thread failed")
+
+    def _note_global_clock(self) -> None:
+        # local completion times; the parent merges max() across processes
+        now = time.monotonic() - self._t0
+        with self._slock:
+            while len(self.stats.clock_times) < self.proc.sent_clock:
+                self.stats.clock_times.append(now)
+
+    def _on_shard_fin(self, msg: ShardFinMsg) -> None:
+        self._fins.add(msg.shard)
+        if len(self._fins) == self.n_shards:
+            self._all_fins.set()
+
+    # ---------------------------------------------------------------- run
+    def run(self) -> dict:
+        self.proc.thread.start()
+        workers = [threading.Thread(target=self._worker_loop, args=(w,),
+                                    name=f"ps-worker-{w}", daemon=True)
+                   for w in self.proc.workers]
+        for t in workers:
+            t.start()
+        timed_out = False
+        for t in workers:
+            while t.is_alive():
+                t.join(timeout=0.5)
+                if time.monotonic() > self._deadline:
+                    timed_out = True
+                    self._record_error(RuntimeError(
+                        f"worker {t.name} still alive at deadline"))
+                    break
+        if not timed_out:
+            # quiesce leg 1: no more updates/clocks from this process (acks
+            # for still-inbound deliveries continue from the comm thread).
+            # A still-running (timed-out) worker forbids this promise — the
+            # run is failing anyway; ship the error without the handshake.
+            for chan in self._channels:
+                self._send(chan, ProcDoneMsg(self.pid))
+            # quiesce leg 2: every shard's fin = our inbound stream is done
+            if not self._all_fins.wait(
+                    timeout=max(0.1, self._deadline - time.monotonic())):
+                self._record_error(RuntimeError(
+                    f"client {self.pid}: shard fins missing "
+                    f"(have {sorted(self._fins)})"))
+        self.proc.inbox.put(SHUTDOWN)
+        self.proc.thread.join(timeout=5.0)
+        for chan in self._channels:
+            chan.close()                       # EOF frame ends parent readers
+        return {
+            "pid": self.pid,
+            "stats": self.stats,
+            "total": self._total,
+            "cache": self.proc.cache,
+            "errors": [repr(e) for e in self._errors],
+        }
+
+
+def _client_child_main(rt: PSRuntime, pid: int, pipe) -> None:
+    """Entry point of a forked client process."""
+    try:
+        import sys
+        # comm/reader threads must grab the GIL promptly from the
+        # compute-bound worker: the default 5 ms switch interval adds a
+        # multi-ms stall to every inbound frontier/delivery hop
+        sys.setswitchinterval(1e-3)
+        host = _ClientHost(rt, pid)
+        payload = host.run()
+    except BaseException as e:
+        payload = {"pid": pid, "stats": RunStats(), "total": {},
+                   "cache": {}, "errors": [repr(e)]}
+    try:
+        pipe.send(payload)
+        pipe.close()
+    finally:
+        # skip atexit/teardown inherited from the parent (jax worker-thread
+        # joins would hang in a forked child)
+        os._exit(0)

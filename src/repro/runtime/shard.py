@@ -1,36 +1,53 @@
-"""Server shard of the threaded PS runtime (paper §4.1).
+"""Server shard of the PS runtime (paper §4.1).
 
-Each shard is one thread owning a hash partition of every key's rows, stored
-in real :class:`repro.core.tables.Table` objects (row ``r`` of a key lives on
-shard ``r % n_shards`` — the same rule as ``Table.server_partition``).  The
-shard applies incoming update parts to its tables (the master copy), then
-propagates them to every peer process cache, echoes client clock messages as
-:class:`ClockMarker` (the delivery frontier the clock bound blocks on), and
-tracks acks so the origin worker's unsynchronized accumulator can shrink only
-once an update really is visible everywhere — the paper's definition of a
-*synchronized* update.
+Each shard is one thread owning a hash partition of every key's rows (row
+``r`` of a key lives on shard ``r % n_shards`` — the same rule as
+``Table.server_partition``), held as one **dense contiguous numpy block per
+key** so a batch of row updates applies as a single vectorized
+``np.add.at`` over the concatenated row indices instead of a Python loop of
+``Table.inc`` calls (numpy releases the GIL inside the fancy-index kernels,
+which is what lets shard threads keep up with multiple worker processes).
+``state()``/``load_state()`` (:mod:`repro.runtime.snapshot`) and
+``read_rows()`` (live locked master reads) are the row-state interfaces.
+
+The shard applies incoming update parts to the master block, then
+propagates them to every peer process cache, echoes client clock messages
+as :class:`ClockMarker` (the delivery frontier the clock bound blocks on),
+and tracks acks so the origin worker's unsynchronized accumulator can
+shrink only once an update really is visible everywhere — the paper's
+definition of a *synchronized* update.
 
 Strong-VAP (paper §2, "half-synchronized" updates): before starting a
 delivery the shard consults :func:`controller.strong_delivery_gate`; gated
 updates queue FIFO per key and are released as acks free half-sync budget,
-mirroring ``server.py`` ``_try_start_delivery`` / ``_on_deliver``.  As in the
-simulator, a queued update is *not* counted against the clock frontier — the
-marker echo is immediate — so the two bounds compose identically in both
-implementations.
+mirroring ``server.py`` ``_try_start_delivery`` / ``_on_deliver``.  As in
+the simulator, a queued update is *not* counted against the clock frontier
+— the marker echo is immediate — so the two bounds compose identically in
+both implementations.
+
+Multi-process quiesce: when the runtime runs with a real transport, each
+client sends :class:`ProcDoneMsg` after its last clock; once every process
+is done and ``pending``/``queued`` have drained, the shard broadcasts
+:class:`ShardFinMsg` (FIFO-after everything else it will ever send), which
+is the client's signal that its inbound stream is complete.
 """
 from __future__ import annotations
 
 import queue
 import threading
 from collections import defaultdict, deque
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core import controller
-from repro.core.tables import Table
-from repro.runtime.messages import (SHUTDOWN, AckMsg, ClockMarker, ClockMsg,
-                                    DeliverMsg, FullyDelivered, UpdateMsg)
+from repro.runtime.messages import (SHUTDOWN, AckMsg, Channel, ClockMarker,
+                                    ClockMsg, DeliverMsg, FullyDelivered,
+                                    ProcDoneMsg, ShardFinMsg, UpdateMsg,
+                                    group_by_channel, pump_inbox)
+from repro.runtime.transport import FifoAssert
+
+_BATCH = 256        # max messages coalesced per apply/dispatch cycle
 
 
 class ServerShard:
@@ -38,13 +55,12 @@ class ServerShard:
         self.rt = rt
         self.sid = sid
         self.inbox: queue.Queue = queue.Queue()
-        # master state: one Table per key, holding only this shard's rows
-        self.tables: Dict[str, Table] = {}
-        for key, x0 in rt._x0.items():
-            t = Table(f"{key}@shard{sid}", n_cols=x0.shape[1], dtype=np.float64)
-            for r in rt._shard_rows[key][sid]:
-                t.inc(int(r), x0[r].copy())
-            self.tables[key] = t
+        self.lock = threading.Lock()      # guards .dense for live reads
+        # master state: one dense (n_owned_rows, C) block per key; the
+        # global row `r` (with r % n_shards == sid) lives at r // n_shards
+        self.dense: Dict[str, np.ndarray] = {
+            key: x0[rt._shard_rows[key][sid]].copy()
+            for key, x0 in rt._x0.items()}
         # strong-VAP: per-key magnitude of half-synchronized updates
         self.halfsync: Dict[str, np.ndarray] = {
             key: np.zeros_like(x0) for key, x0 in rt._x0.items()}
@@ -52,39 +68,75 @@ class ServerShard:
         self.pending: Dict[int, Tuple[UpdateMsg, int]] = {}
         # per-key FIFO of updates waiting on the strong delivery gate
         self.queued: Dict[str, deque] = defaultdict(deque)
-        self._last_seq = defaultdict(lambda: -1)   # per origin process
+        self._fifo = FifoAssert()          # per origin process
+        self._done_procs: set = set()      # multi-process quiesce, leg 1
+        self._fin_sent = False
+        self._outbox: List[Tuple[Channel, object]] = []
         self.thread = threading.Thread(
             target=self._loop, name=f"ps-shard-{sid}", daemon=True)
 
     # ------------------------------------------------------------------ loop
     def _loop(self) -> None:
-        while True:
-            msg = self.inbox.get()
-            if msg is SHUTDOWN:
-                self.inbox.task_done()
-                return
-            try:
-                self._handle(msg)
-            except BaseException as e:            # surface into wait()
-                self.rt._record_error(e)
-            finally:
-                self.inbox.task_done()
-                self.rt._msg_done()
+        pump_inbox(self.inbox, self._handle_batch, cap=_BATCH)
 
+    def _handle_batch(self, batch: list) -> bool:
+        """Coalesce runs of UpdateMsgs into one vectorized apply, dispatch
+        everything else in arrival order, flush sends per channel."""
+        rt = self.rt
+        shutdown = False
+        done = 0
+        run: List[UpdateMsg] = []
+        for msg in batch:
+            if msg is SHUTDOWN:
+                shutdown = True
+                break
+            done += 1
+            try:
+                if rt.check:
+                    sender = getattr(msg, "process", None)
+                    if sender is not None:
+                        err = self._fifo.check(sender, msg.seq)
+                        if err:
+                            rt._violation(f"FIFO violation: proc {sender}->"
+                                          f"shard {self.sid} {err}")
+                if isinstance(msg, UpdateMsg):
+                    run.append(msg)
+                else:
+                    self._flush_updates(run)
+                    run = []
+                    self._handle(msg)
+            except BaseException as e:          # surface into wait()
+                rt._record_error(e)
+        try:
+            self._flush_updates(run)
+            if rt._proc_mode and not shutdown:
+                self._maybe_fin()
+        except BaseException as e:
+            rt._record_error(e)
+        self._flush_outbox()
+        # in-flight decrements must come *after* the sends this batch caused
+        # were enqueued (incrementing the counter), else the quiesce wait can
+        # observe a transient 0 and shut down ahead of late deliveries
+        for _ in range(done):
+            rt._msg_done()
+        return shutdown
+
+    # --------------------------------------------------------------- sends
+    def _send(self, chan: Channel, msg) -> None:
+        self._outbox.append((chan, msg))
+
+    def _flush_outbox(self) -> None:
+        """Per-channel batched send (one frame per channel per cycle)."""
+        if not self._outbox:
+            return
+        pairs, self._outbox = self._outbox, []
+        for chan, msgs in group_by_channel(pairs):
+            self.rt._send_many(chan, msgs)
+
+    # ------------------------------------------------------------- dispatch
     def _handle(self, msg) -> None:
         rt = self.rt
-        if rt.check:
-            sender = getattr(msg, "process", None)
-            if sender is not None:
-                last = self._last_seq[sender]
-                if msg.seq != last + 1:
-                    rt._violation(f"FIFO violation: proc {sender}->shard "
-                                  f"{self.sid} seq {msg.seq} after {last}")
-                self._last_seq[sender] = msg.seq
-
-        if isinstance(msg, UpdateMsg):
-            self._on_update(msg)
-        elif isinstance(msg, AckMsg):
+        if isinstance(msg, AckMsg):
             self._on_ack(msg)
         elif isinstance(msg, ClockMsg):
             # echo the period-completed marker to every peer.  All of the
@@ -93,22 +145,46 @@ class ServerShard:
             # ahead of the markers sent here.
             for q in range(rt.n_proc):
                 if q != msg.process:
-                    rt._send(rt._chan_sp[self.sid][q],
-                             ClockMarker(msg.process, self.sid, msg.clock))
+                    self._send(rt._chan_sp[self.sid][q],
+                               ClockMarker(msg.process, self.sid, msg.clock))
+        elif isinstance(msg, ProcDoneMsg):
+            self._done_procs.add(msg.process)
         else:
             raise TypeError(f"shard {self.sid}: unexpected message {msg!r}")
 
     # --------------------------------------------------------------- updates
-    def _on_update(self, msg: UpdateMsg) -> None:
+    def _flush_updates(self, run: List[UpdateMsg]) -> None:
+        """Apply a run of update parts as one vectorized op per key, then
+        route each through the (per-message) delivery state machine."""
+        if not run:
+            return
         rt = self.rt
-        table = self.tables[msg.key]
-        for i, r in enumerate(msg.rows):
-            table.inc(int(r), msg.delta[i])
+        by_key: Dict[str, List[UpdateMsg]] = {}
+        for msg in run:
+            by_key.setdefault(msg.key, []).append(msg)
+        with self.lock:
+            for key, msgs in by_key.items():
+                dense = self.dense[key]
+                if len(msgs) == 1:
+                    m = msgs[0]
+                    # rows are unique within one part: plain fancy-index add
+                    dense[m.rows // rt.n_shards] += m.delta
+                else:
+                    rows = np.concatenate([m.rows for m in msgs])
+                    delta = np.concatenate([m.delta for m in msgs])
+                    # rows may repeat across parts: np.add.at accumulates
+                    np.add.at(dense, rows // rt.n_shards, delta)
+        for msg in run:
+            self._route_delivery(msg)
+
+    def _route_delivery(self, msg: UpdateMsg) -> None:
+        rt = self.rt
         if rt.n_proc == 1:
             # no peers to propagate to: the update is synchronized already
-            rt._send(rt._chan_sp[self.sid][msg.process],
-                     FullyDelivered(msg.uid, msg.worker, msg.key, msg.rows,
-                                    msg.delta, self.sid))
+            if rt.policy.value_bounded:
+                self._send(rt._chan_sp[self.sid][msg.process],
+                           FullyDelivered(msg.uid, msg.worker, msg.key,
+                                          msg.rows, msg.delta, self.sid))
             return
         if self.queued[msg.key] or not controller.strong_delivery_gate(
                 rt.policy, self.halfsync[msg.key][msg.rows], msg.delta):
@@ -118,24 +194,28 @@ class ServerShard:
 
     def _start_delivery(self, msg: UpdateMsg) -> None:
         rt = self.rt
-        hs = self.halfsync[msg.key]
-        hs[msg.rows] += np.abs(msg.delta)
-        if rt.check:
-            mx = float(np.max(hs[msg.rows])) if msg.rows.size else 0.0
-            with rt._slock:
-                rt.stats.max_halfsync_mag = max(rt.stats.max_halfsync_mag, mx)
+        track = rt.policy.value_bounded   # ack cycle feeds VAP accounting only
+        if track:
+            hs = self.halfsync[msg.key]
+            hs[msg.rows] += np.abs(msg.delta)
+            if rt.check:
+                mx = float(np.max(hs[msg.rows])) if msg.rows.size else 0.0
+                with rt._slock:
+                    rt.stats.max_halfsync_mag = max(
+                        rt.stats.max_halfsync_mag, mx)
         n = 0
         for q in range(rt.n_proc):
             if q == msg.process:
                 continue
-            rt._send(rt._chan_sp[self.sid][q],
-                     DeliverMsg(msg.uid, msg.worker, msg.process, self.sid,
-                                msg.ts, msg.key, msg.rows, msg.delta))
+            self._send(rt._chan_sp[self.sid][q],
+                       DeliverMsg(msg.uid, msg.worker, msg.process, self.sid,
+                                  msg.ts, msg.key, msg.rows, msg.delta))
             n += 1
         with rt._slock:
             rt.stats.n_messages += n
             rt.stats.bytes_sent += msg.nbytes * n
-        self.pending[msg.uid] = (msg, n)
+        if track:
+            self.pending[msg.uid] = (msg, n)
 
     def _on_ack(self, ack: AckMsg) -> None:
         rt = self.rt
@@ -148,9 +228,13 @@ class ServerShard:
         hs = self.halfsync[msg.key]
         res = hs[msg.rows] - np.abs(msg.delta)
         hs[msg.rows] = np.where(np.abs(res) < 1e-12, 0.0, res)
-        rt._send(rt._chan_sp[self.sid][msg.process],
-                 FullyDelivered(msg.uid, msg.worker, msg.key, msg.rows,
-                                msg.delta, self.sid))
+        if rt.policy.value_bounded:
+            # the synchronized-update echo only feeds the VAP unsynced
+            # accounting; for clock-only policies it is pure overhead (and
+            # the sole inbound traffic of a single-process run)
+            self._send(rt._chan_sp[self.sid][msg.process],
+                       FullyDelivered(msg.uid, msg.worker, msg.key, msg.rows,
+                                      msg.delta, self.sid))
         # freed half-sync budget: release queued deliveries for this key FIFO
         dq = self.queued.get(msg.key)
         while dq:
@@ -162,7 +246,43 @@ class ServerShard:
             else:
                 break
 
+    # ------------------------------------------------------- proc quiesce
+    def _maybe_fin(self) -> None:
+        """Broadcast ShardFin once every process is done and deliveries have
+        fully drained — nothing further will ever leave this shard."""
+        rt = self.rt
+        if (self._fin_sent or len(self._done_procs) < rt.n_proc
+                or self.pending or any(self.queued.values())):
+            return
+        self._fin_sent = True
+        for q in range(rt.n_proc):
+            self._send(rt._chan_sp[self.sid][q], ShardFinMsg(self.sid))
+
     # ------------------------------------------------------------- snapshots
-    def rows_snapshot(self, key: str) -> Dict[int, np.ndarray]:
-        """Owned rows of `key` (call only when the runtime is quiesced)."""
-        return {rid: row.get() for rid, row in self.tables[key].rows()}
+    def read_rows(self, key: str, out: np.ndarray) -> None:
+        """Scatter this shard's live rows of `key` into the full (R, C)
+        buffer `out` (locked: safe against the apply loop mid-run)."""
+        rows = self.rt._shard_rows[key][self.sid]
+        with self.lock:
+            out[rows] = self.dense[key]
+
+    def state(self) -> Dict[str, Dict[str, np.ndarray]]:
+        """Snapshot payload: per key, global row ids + dense values."""
+        with self.lock:
+            return {key: {"rows": self.rt._shard_rows[key][self.sid].copy(),
+                          "values": self.dense[key].copy()}
+                    for key in self.dense}
+
+    def load_state(self, state: Dict[str, Dict[str, np.ndarray]]) -> None:
+        """Adopt a snapshot taken by :meth:`state` (rejoin after a kill)."""
+        with self.lock:
+            for key, part in state.items():
+                mine = self.rt._shard_rows[key][self.sid]
+                if (part["rows"].shape != mine.shape
+                        or not np.array_equal(part["rows"], mine)):
+                    raise ValueError(
+                        f"snapshot rows for {key!r} do not match shard "
+                        f"{self.sid}'s partition")
+                if part["values"].shape != self.dense[key].shape:
+                    raise ValueError(f"snapshot shape mismatch for {key!r}")
+                self.dense[key][...] = part["values"]

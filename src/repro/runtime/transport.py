@@ -1,0 +1,532 @@
+"""Multi-process transport for the PS runtime (ROADMAP "runtime follow-ups").
+
+Three interchangeable wire backends behind the same :class:`Channel`
+interface the threaded runtime already uses (``messages.Channel``):
+
+  * ``queue`` — the original in-process ``queue.Queue`` edges (threads only);
+  * ``tcp``   — loopback sockets, one connection per client<->shard channel
+    pair, length-prefixed pickle-protocol-5 frames with numpy row buffers
+    carried out-of-band as contiguous byte ranges;
+  * ``shm``   — same frames over single-producer/single-consumer shared-
+    memory byte rings (two rings per client<->shard pair, one per
+    direction) for same-host deployments.
+
+Framing.  A frame is ``u32 payload_len | payload`` where the payload is::
+
+    u32 n_buffers | u32 head_len | head | (u64 buf_len | buf) * n_buffers
+
+``head`` is ``pickle.dumps(msgs, protocol=5, buffer_callback=...)`` of a
+*list* of messages, so senders coalesce many row updates into one frame
+(``Channel.send_many``) and the arrays inside ``UpdateMsg``/``DeliverMsg``
+travel as raw contiguous buffers after the pickle head instead of being
+copied through the pickler.  ``payload_len == EOF_LEN`` is the end-of-stream
+sentinel.  :class:`FrameDecoder` is incremental: feed it arbitrary byte
+chunks (short reads, split frames) and it yields complete messages only.
+
+FIFO.  Channels stamp per-channel sequence numbers under a lock exactly like
+the in-process queues; receivers assert contiguity via :class:`FifoAssert`,
+so a reordering (or replaying) transport is *detected*, not assumed away.
+
+Portability.  The shm ring's lock-free cursor protocol assumes total store
+ordering (x86/x86-64); on weakly-ordered ISAs (aarch64) the cursors would
+need real barriers, which pure Python cannot express — use the ``tcp``
+backend there (the FrameDecoder's short-frame errors and the FIFO asserts
+would flag the corruption rather than silently accepting it).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import queue
+import socket
+import struct
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from multiprocessing import shared_memory
+
+_U32 = struct.Struct("<I")
+_U64 = struct.Struct("<Q")
+EOF_LEN = 0xFFFFFFFF          # length-prefix value signalling end-of-stream
+MAX_FRAME = EOF_LEN - 1
+
+EOF = object()                # yielded by FrameDecoder when the peer closed
+
+
+def encode_frame(msgs: list) -> bytes:
+    """One wire frame holding `msgs` (a list — batching is the unit)."""
+    buffers: List[pickle.PickleBuffer] = []
+    head = pickle.dumps(msgs, protocol=5, buffer_callback=buffers.append)
+    parts = [b"", _U32.pack(len(buffers)), _U32.pack(len(head)), head]
+    for b in buffers:
+        raw = b.raw()
+        parts.append(_U64.pack(raw.nbytes))
+        parts.append(raw)          # join() copies once; no tobytes() double
+    payload_len = sum(len(p) for p in parts)
+    if payload_len > MAX_FRAME:
+        raise ValueError(f"frame too large: {payload_len} bytes")
+    parts[0] = _U32.pack(payload_len)
+    return b"".join(parts)
+
+
+def eof_frame() -> bytes:
+    return _U32.pack(EOF_LEN)
+
+
+def decode_payload(payload: bytes) -> list:
+    """Inverse of the payload part of :func:`encode_frame`."""
+    n_buf = _U32.unpack_from(payload, 0)[0]
+    head_len = _U32.unpack_from(payload, 4)[0]
+    off = 8
+    head = payload[off:off + head_len]
+    if len(head) != head_len:
+        raise ValueError("short frame: truncated pickle head")
+    off += head_len
+    bufs = []
+    for _ in range(n_buf):
+        if off + 8 > len(payload):
+            raise ValueError("short frame: truncated buffer header")
+        n = _U64.unpack_from(payload, off)[0]
+        off += 8
+        buf = payload[off:off + n]
+        if len(buf) != n:
+            raise ValueError("short frame: truncated buffer body")
+        bufs.append(buf)
+        off += n
+    if off != len(payload):
+        raise ValueError(f"frame overrun: {len(payload) - off} trailing bytes")
+    return pickle.loads(head, buffers=bufs)
+
+
+class FrameDecoder:
+    """Incremental frame decoder tolerating arbitrary chunking of the stream.
+
+    ``feed(data)`` returns the list of *messages* (flattened across any
+    complete frames in the buffer so far); a trailing partial frame stays
+    buffered until its bytes arrive.  After the EOF sentinel, ``closed`` is
+    True and further frames are rejected.
+    """
+
+    def __init__(self):
+        self._buf = bytearray()
+        self.closed = False
+
+    def feed(self, data: bytes) -> list:
+        if self.closed and data:
+            raise ValueError("data after EOF sentinel")
+        self._buf += data
+        out: list = []
+        while True:
+            if len(self._buf) < 4:
+                break
+            plen = _U32.unpack_from(self._buf, 0)[0]
+            if plen == EOF_LEN:
+                self.closed = True
+                if len(self._buf) > 4:
+                    raise ValueError("data after EOF sentinel")
+                del self._buf[:4]
+                break
+            if len(self._buf) < 4 + plen:
+                break                      # short frame: wait for more bytes
+            payload = bytes(self._buf[4:4 + plen])
+            del self._buf[:4 + plen]
+            out.extend(decode_payload(payload))
+        return out
+
+    @property
+    def pending_bytes(self) -> int:
+        return len(self._buf)
+
+
+class FifoAssert:
+    """Per-sender contiguous-sequence assertion (shared by shard & client).
+
+    ``check(sender, seq)`` returns an error string on a gap/reorder/replay,
+    else None.  Mirrors the simulator's ``_last_seq_seen`` checking.
+    """
+
+    def __init__(self):
+        self._last: Dict[object, int] = {}
+
+    def check(self, sender, seq: int) -> Optional[str]:
+        last = self._last.get(sender, -1)
+        self._last[sender] = max(seq, last)
+        if seq != last + 1:
+            return f"seq {seq} after {last}"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# wire-backed channels
+# ---------------------------------------------------------------------------
+
+
+class WireChannel:
+    """Channel facade over a byte sink: stamps seqs, writes framed batches.
+
+    Same duck type as :class:`repro.runtime.messages.Channel` (``send`` /
+    ``send_many``); the seq stamp and the wire write happen under one lock so
+    sequence numbers are monotone in *stream order* even with multiple sender
+    threads (all workers of a client process share the proc->shard edge).
+    """
+
+    def __init__(self, name: str, write: Callable[[bytes], None],
+                 max_frame: Optional[int] = None):
+        self.name = name
+        self._write = write
+        self._max_frame = max_frame    # soft cap: split batches above this
+        self._seq = 0
+        self._lock = threading.Lock()
+
+    def send(self, msg) -> None:
+        self.send_many([msg])
+
+    def send_many(self, msgs: list) -> None:
+        if not msgs:
+            return
+        with self._lock:
+            for m in msgs:
+                m.seq = self._seq
+                self._seq += 1
+            self._write_frames(msgs)
+
+    def _write_frames(self, msgs: list) -> None:
+        """Encode and write, halving batches that exceed the frame cap (a
+        bounded wire like a shm ring cannot take arbitrarily large frames;
+        a single oversized message still goes out whole — size the ring for
+        the largest single row part)."""
+        frame = encode_frame(msgs)
+        if (self._max_frame is not None and len(frame) > self._max_frame
+                and len(msgs) > 1):
+            mid = len(msgs) // 2
+            self._write_frames(msgs[:mid])
+            self._write_frames(msgs[mid:])
+            return
+        self._write(frame)
+
+    def close(self) -> None:
+        try:
+            self._write(eof_frame())
+        except (OSError, ValueError, RuntimeError):
+            pass    # peer gone / ring full past deadline; EOF is best-effort
+
+
+def _reader_loop(read_chunk: Callable[[], Optional[bytes]],
+                 inbox: queue.Queue,
+                 on_error: Callable[[BaseException], None]) -> None:
+    """Pump a byte source into an inbox until EOF. `read_chunk` returns b''
+    to mean try-again (ring empty) and None on hard end-of-stream."""
+    dec = FrameDecoder()
+    try:
+        while not dec.closed:
+            chunk = read_chunk()
+            if chunk is None:
+                break
+            if not chunk:
+                continue
+            for msg in dec.feed(chunk):
+                inbox.put(msg)
+    except BaseException as e:      # surfaced into RunStats by the runtime
+        on_error(e)
+
+
+# ---------------------------------------------------------------------------
+# TCP backend
+# ---------------------------------------------------------------------------
+
+
+class TcpConn:
+    """One accepted/connected socket carrying a duplex client<->shard edge."""
+
+    def __init__(self, sock: socket.socket):
+        self.sock = sock
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        # channels idle for long stretches are normal (a client with no
+        # inbound deliveries); never let a connect/accept timeout linger
+        # and poison recv() mid-run
+        sock.settimeout(None)
+
+    def write(self, data: bytes) -> None:
+        self.sock.sendall(data)
+
+    def read_chunk(self) -> Optional[bytes]:
+        data = self.sock.recv(1 << 16)
+        return data if data else None
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self.sock.close()
+
+
+class TcpTransport:
+    """Listener + handshake: one loopback connection per (process, shard).
+
+    Parent: ``listen()`` before forking, then ``accept_all()``.  Child:
+    ``connect(pid)`` opens its ``n_shards`` connections, each starting with
+    an 8-byte ``(pid, sid)`` handshake so the parent can route it.
+    """
+
+    def __init__(self, n_proc: int, n_shards: int):
+        self.n_proc = n_proc
+        self.n_shards = n_shards
+        self._lsock: Optional[socket.socket] = None
+        self.port = 0
+
+    def listen(self) -> None:
+        s = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        s.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        s.bind(("127.0.0.1", 0))
+        s.listen(self.n_proc * self.n_shards)
+        self._lsock = s
+        self.port = s.getsockname()[1]
+
+    def accept_all(self, deadline: float) -> Dict[Tuple[int, int], TcpConn]:
+        conns: Dict[Tuple[int, int], TcpConn] = {}
+        assert self._lsock is not None
+        self._lsock.settimeout(1.0)
+        want = self.n_proc * self.n_shards
+        while len(conns) < want:
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"tcp transport: only {len(conns)}/{want} channels "
+                    "connected before deadline")
+            try:
+                sock, _ = self._lsock.accept()
+            except socket.timeout:
+                continue
+            try:
+                # the 8-byte handshake must also respect the deadline — a
+                # connector that dies (or a stray local client) must not
+                # wedge start() in a blocking recv
+                sock.settimeout(5.0)
+                hs = _recv_exact(sock, 8)
+            except (socket.timeout, ConnectionError, OSError):
+                sock.close()
+                continue
+            pid, sid = _U32.unpack_from(hs, 0)[0], _U32.unpack_from(hs, 4)[0]
+            if (pid >= self.n_proc or sid >= self.n_shards
+                    or (pid, sid) in conns):   # out-of-range or duplicate:
+                sock.close()                   # never split a FIFO channel
+                continue                       # across two sockets
+            conns[(pid, sid)] = TcpConn(sock)
+        self._lsock.close()
+        self._lsock = None
+        return conns
+
+    def connect(self, pid: int) -> Dict[int, TcpConn]:
+        out: Dict[int, TcpConn] = {}
+        for sid in range(self.n_shards):
+            s = socket.create_connection(("127.0.0.1", self.port), timeout=30)
+            s.sendall(_U32.pack(pid) + _U32.pack(sid))
+            out[sid] = TcpConn(s)
+        return out
+
+    def close_listener(self) -> None:
+        if self._lsock is not None:
+            self._lsock.close()
+            self._lsock = None
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("handshake: peer closed early")
+        buf += chunk
+    return buf
+
+
+# ---------------------------------------------------------------------------
+# shared-memory ring backend
+# ---------------------------------------------------------------------------
+
+
+class ShmRing:
+    """Single-producer single-consumer byte ring in a SharedMemory segment.
+
+    Layout: ``u64 head | u64 tail | data[capacity]``.  ``head`` (read
+    cursor) is written only by the consumer, ``tail`` (write cursor) only by
+    the producer; both are monotonically increasing byte counts taken modulo
+    ``capacity`` on access, so no lock is needed across processes.  The
+    counters are updated strictly *after* the corresponding memcpy, which on
+    CPython (no store reordering across bytecode, x86 TSO) makes the data
+    visible before the cursor that publishes it.
+    """
+
+    HDR = 16
+
+    def __init__(self, shm: shared_memory.SharedMemory, capacity: int):
+        self.shm = shm
+        self.capacity = capacity
+        self.buf = shm.buf
+
+    @classmethod
+    def create(cls, capacity: int) -> "ShmRing":
+        shm = shared_memory.SharedMemory(create=True,
+                                         size=cls.HDR + capacity)
+        shm.buf[:cls.HDR] = b"\0" * cls.HDR
+        return cls(shm, capacity)
+
+    # cursor accessors -----------------------------------------------------
+    def _head(self) -> int:
+        return _U64.unpack_from(self.buf, 0)[0]
+
+    def _tail(self) -> int:
+        return _U64.unpack_from(self.buf, 8)[0]
+
+    def _set_head(self, v: int) -> None:
+        _U64.pack_into(self.buf, 0, v)
+
+    def _set_tail(self, v: int) -> None:
+        _U64.pack_into(self.buf, 8, v)
+
+    # producer -------------------------------------------------------------
+    def write(self, data: bytes, deadline: float = float("inf"),
+              abort: Optional[Callable[[], bool]] = None) -> None:
+        """Block (spin + short sleep) until `data` fits, then publish it."""
+        n = len(data)
+        if n > self.capacity:
+            raise ValueError(
+                f"frame of {n} bytes exceeds ring capacity {self.capacity}")
+        spins = 0
+        while self.capacity - (self._tail() - self._head()) < n:
+            spins += 1
+            if spins > 100:
+                if time.monotonic() > deadline:
+                    raise RuntimeError("shm ring write timed out (peer stuck)")
+                if abort is not None and abort():
+                    raise RuntimeError("shm ring write aborted")
+                time.sleep(2e-4)
+        tail = self._tail()
+        pos = tail % self.capacity
+        first = min(n, self.capacity - pos)
+        off = self.HDR + pos
+        self.buf[off:off + first] = data[:first]
+        if first < n:                       # wrap around to the start
+            self.buf[self.HDR:self.HDR + n - first] = data[first:]
+        self._set_tail(tail + n)
+
+    # consumer -------------------------------------------------------------
+    def read_available(self) -> bytes:
+        """Drain and return whatever bytes are currently published."""
+        head, tail = self._head(), self._tail()
+        n = tail - head
+        if n == 0:
+            return b""
+        pos = head % self.capacity
+        first = min(n, self.capacity - pos)
+        off = self.HDR + pos
+        out = bytes(self.buf[off:off + first])
+        if first < n:
+            out += bytes(self.buf[self.HDR:self.HDR + n - first])
+        self._set_head(head + n)
+        return out
+
+    def close(self) -> None:
+        self.buf = None
+        self.shm.close()
+
+    def unlink(self) -> None:
+        try:
+            self.shm.unlink()
+        except FileNotFoundError:
+            pass
+
+
+class ShmEdge:
+    """The two rings of one client<->shard pair (c2s = client writes), each
+    with a pipe *doorbell*: the producer writes a wake byte after publishing
+    a frame, so the consumer blocks in ``os.read`` (a real kernel sleep that
+    releases the GIL) instead of polling.  Sub-ms polling is not an option —
+    each poll wakeup forces a GIL handoff, and a few fine-grained pollers
+    measurably halve a worker thread's throughput on a small host."""
+
+    def __init__(self, capacity: int):
+        self.c2s = ShmRing.create(capacity)
+        self.s2c = ShmRing.create(capacity)
+        self.c2s_bell = os.pipe()
+        self.s2c_bell = os.pipe()
+        for _, w in (self.c2s_bell, self.s2c_bell):
+            os.set_blocking(w, False)
+
+    @staticmethod
+    def ring_bell(bell_w: int) -> None:
+        try:
+            os.write(bell_w, b"\x01")
+        except (BlockingIOError, OSError):
+            pass        # pipe full of pending wakeups / peer gone: fine
+
+    def wake_all(self) -> None:
+        """Unblock any reader parked on a doorbell (teardown path)."""
+        for _, w in (self.c2s_bell, self.s2c_bell):
+            self.ring_bell(w)
+
+    def close(self, unlink: bool) -> None:
+        for ring in (self.c2s, self.s2c):
+            ring.close()
+            if unlink:
+                ring.unlink()
+        for r, w in (self.c2s_bell, self.s2c_bell):
+            for fd in (r, w):
+                try:
+                    os.close(fd)
+                except OSError:
+                    pass
+
+
+class ShmTransport:
+    """Pre-forked shared-memory edges; children inherit the mappings."""
+
+    def __init__(self, n_proc: int, n_shards: int, capacity: int = 1 << 20):
+        self.edges: Dict[Tuple[int, int], ShmEdge] = {
+            (p, s): ShmEdge(capacity)
+            for p in range(n_proc) for s in range(n_shards)}
+
+    def close(self, unlink: bool) -> None:
+        for e in self.edges.values():
+            e.wake_all()               # unpark doorbell readers first
+        for e in self.edges.values():
+            e.close(unlink)
+
+
+def ring_writer(ring: ShmRing, bell_w: int,
+                deadline: float = float("inf")) -> Callable[[bytes], None]:
+    """Byte sink for a :class:`WireChannel`: publish, then ring the bell."""
+    def write(data: bytes) -> None:
+        ring.write(data, deadline)
+        ShmEdge.ring_bell(bell_w)
+    return write
+
+
+def ring_reader(ring: ShmRing, bell_r: int,
+                stop: threading.Event) -> Callable[[], Optional[bytes]]:
+    """read_chunk adapter for :func:`_reader_loop` over a ShmRing: drain
+    whatever is published, else park on the doorbell until the producer
+    rings.  A stale wake byte (data already drained) just loops once more;
+    a wake byte can never be missed because it persists in the pipe."""
+    def read_chunk() -> Optional[bytes]:
+        data = ring.read_available()
+        if data:
+            return data
+        if stop.is_set():
+            return None
+        try:
+            os.read(bell_r, 1 << 16)       # kernel sleep until a frame lands
+        except OSError:
+            return None                    # bell closed: teardown
+        return b""
+    return read_chunk
+
+
+def start_reader(name: str, read_chunk: Callable[[], Optional[bytes]],
+                 inbox: queue.Queue,
+                 on_error: Callable[[BaseException], None]) -> threading.Thread:
+    t = threading.Thread(target=_reader_loop, args=(read_chunk, inbox, on_error),
+                         name=name, daemon=True)
+    t.start()
+    return t

@@ -86,6 +86,41 @@ def test_runtime_final_state_equals_simulator(polname, pol, seed):
 
 
 # ---------------------------------------------------------------------------
+# (a') the same, with real OS processes over the wire transports
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("polname,pol", _POLICIES, ids=[p[0] for p in _POLICIES])
+@pytest.mark.parametrize("transport", ["proc", "tcp"])
+def test_runtime_final_state_equals_simulator_multiprocess(
+        polname, pol, transport):
+    """The multi-process runtime (forked clients, shared-memory rings or
+    loopback sockets, batched multi-row frames) still refines the executable
+    spec: quiesced master + every shipped client cache == simulator."""
+    seed = 0
+    fn = _sched_fn(seed)
+    sim = AsyncPS(4, pol, _x0(), threads_per_process=2, seed=seed,
+                  network=NetworkModel(seed=seed))
+    st_sim = sim.run(fn, 12)
+    rt = PSRuntime(4, pol, _x0(), n_shards=2, threads_per_process=2,
+                   seed=seed, transport=transport)
+    st_rt = rt.run(fn, 12, timeout=90)
+
+    assert st_sim.violations == [], st_sim.violations
+    assert st_rt.violations == [], st_rt.violations
+    assert st_sim.n_updates == st_rt.n_updates
+    for k, ref in sim.views[0].items():
+        shape = ref.shape
+        np.testing.assert_array_equal(
+            rt.master_value(k).reshape(shape), ref,
+            err_msg=f"{polname} {transport} master[{k}]")
+        for p in range(rt.n_proc):
+            np.testing.assert_array_equal(
+                rt.view(p)[k].reshape(shape), ref,
+                err_msg=f"{polname} {transport} proc{p}[{k}]")
+
+
+# ---------------------------------------------------------------------------
 # (b) randomized interleavings: bounds never violated mid-run
 # ---------------------------------------------------------------------------
 
@@ -127,6 +162,51 @@ def test_stress_invariants_hold_mid_run(polname, pol):
     if pol.value_bounded:
         bound = max(st.max_update_mag, pol.value_bound)
         assert 0.0 < st.max_unsynced_mag <= bound + 1e-9
+
+
+@pytest.mark.parametrize("polname,pol", _STRESS, ids=[p[0] for p in _STRESS])
+def test_stress_invariants_hold_multiprocess(polname, pol):
+    """Free multi-process interleaving: 2 forked client processes x 2 worker
+    threads, no scheduler cooperation at all.  Each child checks the SSP
+    clock bound at every period start and the element-wise VAP bound after
+    every Inc; the parent merges and asserts zero violations."""
+    def fn(w, clock, view, rng):
+        return {"a": rng.normal(0.0, 0.6, size=(8, 4)),
+                "b": rng.normal(0.0, 0.6, size=5)}
+
+    x0 = {"a": np.zeros((8, 4)), "b": np.zeros(5)}
+    rt = PSRuntime(4, pol, x0, n_shards=2, threads_per_process=2, seed=11,
+                   transport="proc")
+    st = rt.run(fn, 80, timeout=110)
+
+    assert st.violations == [], st.violations[:5]
+    assert st.n_updates == 4 * 80 * 2
+    if pol.clock_bounded:
+        assert st.max_observed_staleness <= pol.staleness
+    if pol.value_bounded:
+        bound = max(st.max_update_mag, pol.value_bound)
+        assert 0.0 < st.max_unsynced_mag <= bound + 1e-9
+
+
+def test_live_master_reads_multiprocess():
+    """Serving against the live master shards while forked clients stream
+    updates: reads are per-shard-locked and observe monotone progress."""
+    def fn(w, clock, view, rng):
+        return {"a": np.ones((8, 4))}
+
+    x0 = {"a": np.zeros((8, 4))}
+    rt = PSRuntime(2, policies.ssp(3), x0, n_shards=2,
+                   threads_per_process=1, seed=0, transport="proc")
+    rt.start(fn, 50, timeout=90)
+    seen = []
+    while rt.running and len(seen) < 2000:
+        v = rt.read("a")                  # live master read, per-shard locks
+        assert v.shape == (8, 4)
+        seen.append(float(v.sum()))
+    stats = rt.wait()
+    assert stats.violations == []
+    assert seen == sorted(seen)
+    assert float(rt.master_value("a").sum()) == 2 * 50 * 32
 
 
 # ---------------------------------------------------------------------------

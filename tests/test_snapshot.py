@@ -1,0 +1,115 @@
+"""Snapshot/restore of the PS runtime's master shard state.
+
+The failover story: updates are additive, so a server killed after clock
+``a`` and restarted from its snapshot must land on exactly the state of an
+uninterrupted run — asserted against the simulator as the spec.
+"""
+import numpy as np
+import pytest
+
+from repro.core import AsyncPS, NetworkModel, policies
+from repro.runtime import PSRuntime, load_snapshot, save_snapshot, snapshot_params
+
+
+def _x0():
+    return {"a": np.arange(32, dtype=float).reshape(8, 4) / 2.0,
+            "b": np.ones(5)}
+
+
+def _sched_fn(seed, shift=0):
+    def fn(w, clock, view, rng):
+        r = np.random.default_rng((seed, w, clock + shift))
+        return {"a": r.integers(-3, 4, size=(8, 4)).astype(float),
+                "b": r.integers(-3, 4, size=5).astype(float)}
+    return fn
+
+
+def test_snapshot_resume_equals_uninterrupted_run():
+    """Run 6 clocks, snapshot, resume a fresh runtime for 6 more: final
+    master == simulator's 12-clock final state (kill/rejoin semantics)."""
+    sim = AsyncPS(4, policies.ssp(2), _x0(), threads_per_process=2, seed=0,
+                  network=NetworkModel(seed=0))
+    sim.run(_sched_fn(0), 12)
+
+    rt_a = PSRuntime(4, policies.ssp(2), _x0(), n_shards=2,
+                     threads_per_process=2, seed=0)
+    rt_a.run(_sched_fn(0), 6, timeout=60)
+    snap = rt_a.snapshot()
+
+    rt_b = PSRuntime(4, policies.ssp(2), _x0(), n_shards=2,
+                     threads_per_process=2, seed=0, restore_from=snap)
+    st = rt_b.run(_sched_fn(0, shift=6), 6, timeout=60)
+    assert st.violations == []
+    for k, ref in sim.views[0].items():
+        np.testing.assert_array_equal(rt_b.master_value(k).reshape(ref.shape),
+                                      ref, err_msg=f"resumed master[{k}]")
+
+
+def test_snapshot_file_roundtrip(tmp_path):
+    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt.run(_sched_fn(1), 4, timeout=60)
+    snap = rt.snapshot()
+    path = tmp_path / "shards.npz"
+    save_snapshot(path, snap)
+    loaded = load_snapshot(path)
+    assert loaded["n_shards"] == 2
+    assert loaded["shapes"] == {"a": (8, 4), "b": (5,)}
+    for sid in range(2):
+        for key in ("a", "b"):
+            np.testing.assert_array_equal(
+                loaded["shards"][sid][key]["values"],
+                snap["shards"][sid][key]["values"])
+    # and the assembled params equal the quiesced master
+    params = snapshot_params(loaded)
+    for k in params:
+        np.testing.assert_array_equal(params[k], rt.master_value(k))
+
+
+def test_killed_shard_rejoins_from_snapshot():
+    """A replacement shard adopts the snapshot partition via load_state."""
+    rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2)
+    rt.run(_sched_fn(2), 5, timeout=60)
+    snap = rt.snapshot()
+
+    rt2 = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2)
+    for key in rt2.shards[1].dense:           # "the shard process was killed"
+        rt2.shards[1].dense[key][...] = np.nan
+    rt2.shards[0].load_state(snap["shards"][0])
+    rt2.shards[1].load_state(snap["shards"][1])
+    for k in ("a", "b"):
+        np.testing.assert_array_equal(rt2.master_value(k), rt.master_value(k))
+
+
+def test_restore_repartitions_across_different_n_shards():
+    """restore_from reassembles the master, so the shard count may change
+    between the killed and the resumed server."""
+    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt.run(_sched_fn(3), 4, timeout=60)
+    snap = rt.snapshot()
+    rt3 = PSRuntime(3, policies.bsp(), _x0(), n_shards=3,
+                    threads_per_process=1, restore_from=snap)
+    for k in ("a", "b"):
+        np.testing.assert_array_equal(rt3.master_value(k), rt.master_value(k))
+
+
+def test_restore_rejects_mismatched_shapes_and_keys():
+    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt.run(_sched_fn(4), 2, timeout=60)
+    snap = rt.snapshot()
+    with pytest.raises(ValueError, match="keys"):
+        PSRuntime(2, policies.bsp(), {"a": np.zeros((8, 4))}, n_shards=2,
+                  restore_from=snap)
+    with pytest.raises(ValueError, match="shape"):
+        PSRuntime(2, policies.bsp(),
+                  {"a": np.zeros((8, 5)), "b": np.zeros(5)}, n_shards=2,
+                  restore_from=snap)
+    bad = {**snap, "version": 99}
+    with pytest.raises(ValueError, match="version"):
+        PSRuntime(2, policies.bsp(), _x0(), n_shards=2, restore_from=bad)
+
+
+def test_shard_load_state_rejects_wrong_partition():
+    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    snap = rt.snapshot()
+    with pytest.raises(ValueError, match="partition"):
+        rt.shards[0].load_state(snap["shards"][1])
