@@ -1,0 +1,230 @@
+"""Benchmark: the read-replica serving tier — throughput & latency per SLO.
+
+For each (runtime transport x replica count x staleness SLO), stream
+SGD-style updates through the real runtime while reader threads hammer the
+:class:`ReadGateway`; the ``replicas=0`` rows are the **locked-master
+baseline** (``master_value()``: per-shard-locked assembly of the
+authoritative blocks — what serving looked like before the replica tier).
+Reported per configuration:
+
+  * reads/sec + read p50/p99 (us)  — serving throughput under live updates;
+  * mean/max measured staleness    — the stamp the gateway puts on every
+                                     response, measured against the master's
+                                     applied vector clock (never above the
+                                     requested SLO by construction);
+  * escalations                    — reads the replicas could not serve
+                                     within the SLO before the deadline.
+
+The claim to read on this host (see the calibration caveat in
+BENCH_runtime.json / ROADMAP): at *equal worker count*, **2-replica**
+reads beat locked-master reads — the replica copy is a contiguous memcpy
+off the hot shard locks, while the master read assembles and scatters
+under them, and the fan-out spreads readers across replica locks.  A
+single replica funnels every reader through one lock while still paying
+the publish/ingest cost, so r1 rows land *below* the baseline: the tier
+pays off at fan-out >= 2, which is its reason to exist.
+
+CLI (the CI bench-smoke job runs the tiny config and uploads the JSON):
+
+    PYTHONPATH=src python benchmarks/bench_serving.py \
+        [--smoke] [--json BENCH_serving.json] \
+        [--transports queue,proc] [--replicas 1,2] [--slos 0,3,any]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import ssp
+from repro.runtime import PSRuntime, ReadGateway
+
+KEYS = {"w": (512, 64)}       # 256 KiB of float64: copies & scatters matter
+CLOCKS = 40
+COMPUTE_ITERS = 60            # worker matmul chain per clock (~ms of numpy)
+SERVING_OF = {"queue": "queue", "shm": "shm", "proc": "shm", "tcp": "tcp"}
+
+
+def _update_fn(w, clock, view, rng):
+    view.get("w")                       # exercise the worker read path too
+    g = rng.normal(0.0, 1.0, size=(64, 64)) / 8.0
+    v = rng.normal(0.0, 1.0, size=(64, KEYS["w"][1]))
+    for _ in range(COMPUTE_ITERS):
+        v = g @ v
+        v /= max(1.0, float(np.abs(v).max()))
+    # SGD-realistic sparse touch: a 64-row slice of the 512-row key (the
+    # all-zero rows are elided before they reach the wire), so the serving
+    # value stays big while per-clock publish traffic stays minibatch-sized
+    delta = np.zeros(KEYS["w"])
+    r0 = int(rng.integers(0, KEYS["w"][0] - 64))
+    delta[r0:r0 + 64] = 0.01 * v
+    return {"w": delta}
+
+
+def _one(transport: str, n_replicas: int, slo, n_workers: int,
+         clocks: int, n_readers: int = 2) -> Dict:
+    x0 = {k: np.zeros(shape) for k, shape in KEYS.items()}
+    rt = PSRuntime(n_workers, ssp(3), x0, n_shards=2,
+                   threads_per_process=1, seed=0, transport=transport)
+    rt.start(_update_fn, clocks, timeout=600)
+    gw = (ReadGateway(rt, n_replicas=n_replicas,
+                      transport=SERVING_OF[transport])
+          if n_replicas > 0 else None)
+    lat: List[float] = []
+    stale: List[int] = []
+    esc = [0]
+    llock = threading.Lock()
+    stop = threading.Event()
+
+    def reader():
+        my_lat, my_stale, my_esc = [], [], 0
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            if gw is None:
+                rt.master_value("w")           # locked-master baseline
+                my_stale.append(0)
+            else:
+                # short deadline: a read the replicas cannot serve within
+                # its SLO escalates to the master quickly (the intended
+                # serving behavior under write saturation) instead of
+                # parking for seconds and skewing the percentiles
+                res = gw.read("w", slo=slo, timeout=0.25)
+                my_stale.append(res.staleness)
+                my_esc += res.escalated
+            my_lat.append(time.perf_counter() - t0)
+        with llock:
+            lat.extend(my_lat)
+            stale.extend(my_stale)
+            esc[0] += my_esc
+
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=reader, daemon=True)
+               for _ in range(n_readers)]
+    for th in threads:
+        th.start()
+    stats = rt.wait()
+    window = time.perf_counter() - t0
+    stop.set()
+    for th in threads:
+        th.join(timeout=10)
+    if gw is not None:
+        gw.close()
+
+    q = np.quantile(np.asarray(lat), [0.5, 0.99]) if lat else [0.0, 0.0]
+    slo_label = "master" if n_replicas == 0 else (
+        "any" if slo is None else str(slo))
+    return {
+        "name": f"serving/{transport}/r{n_replicas}/slo_{slo_label}"
+                f"/w{n_workers}",
+        "transport": transport,
+        "serving_transport": SERVING_OF[transport] if n_replicas else None,
+        "replicas": n_replicas,
+        "slo": slo_label,
+        "workers": n_workers,
+        "n_reads": len(lat),
+        "reads_per_s": len(lat) / max(window, 1e-9),
+        "us_per_call": window / max(len(lat), 1) * 1e6,
+        "read_p50_us": float(q[0]) * 1e6,
+        "read_p99_us": float(q[1]) * 1e6,
+        "mean_staleness": float(np.mean(stale)) if stale else 0.0,
+        "max_staleness": int(max(stale)) if stale else 0,
+        "escalations": int(esc[0]),
+        "updates_per_s": stats.n_updates / max(window, 1e-9),
+        "violations": len(stats.violations),
+    }
+
+
+def run(transports: Sequence[str] = ("queue", "proc"),
+        replica_counts: Sequence[int] = (1, 2),
+        slos: Sequence = (0, 3, None),
+        n_workers: int = 2,
+        clocks: int = CLOCKS) -> List[Dict]:
+    rows = []
+    for transport in transports:
+        rows.append(_one(transport, 0, None, n_workers, clocks))  # baseline
+        for n_rep in replica_counts:
+            for slo in slos:
+                rows.append(_one(transport, n_rep, slo, n_workers, clocks))
+    return rows
+
+
+def write_json(rows: List[Dict], path: str) -> None:
+    """Consolidated BENCH_serving.json: replica-vs-locked-master serving
+    throughput at equal worker count, per transport x replicas x SLO."""
+    out = {
+        "schema": "bench_serving/v1",
+        "meta": {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "cpus": os.cpu_count(),
+        },
+        "rows": rows,
+    }
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: 2 replicas, slo 3, few clocks")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write consolidated BENCH_serving.json here")
+    ap.add_argument("--transports", default=None,
+                    help="comma list from queue,proc,shm,tcp")
+    ap.add_argument("--replicas", default=None, help="comma list, e.g. 1,2")
+    ap.add_argument("--slos", default=None,
+                    help='comma list of ints or "any", e.g. 0,3,any')
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--clocks", type=int, default=None)
+    args = ap.parse_args()
+
+    transports = (args.transports.split(",") if args.transports
+                  else ("queue", "proc"))
+    if args.smoke:
+        replicas = (2,)
+        slos = (3,)
+        clocks = args.clocks or 10
+    else:
+        replicas = (1, 2)
+        slos = (0, 3, None)
+        clocks = args.clocks or CLOCKS
+    if args.replicas:
+        replicas = tuple(int(r) for r in args.replicas.split(","))
+    if args.slos:
+        slos = tuple(None if s == "any" else int(s)
+                     for s in args.slos.split(","))
+
+    rows = run(transports=transports, replica_counts=replicas, slos=slos,
+               n_workers=args.workers, clocks=clocks)
+    for r in rows:
+        print(f"{r['name']}: {r['reads_per_s']:.0f} reads/s, "
+              f"p50 {r['read_p50_us']:.0f}us p99 {r['read_p99_us']:.0f}us, "
+              f"staleness mean {r['mean_staleness']:.2f} "
+              f"max {r['max_staleness']}, esc {r['escalations']}")
+    per = {(r["transport"], r["replicas"], r["slo"]): r["reads_per_s"]
+           for r in rows}
+    for transport in transports:
+        base = per.get((transport, 0, "master"))
+        if not base:
+            continue
+        for (tr, n_rep, slo), v in per.items():
+            if tr == transport and n_rep > 0:
+                print(f"# {transport} r{n_rep} slo_{slo} vs locked master "
+                      f"(same {args.workers} workers): x{v / base:.2f}")
+    if args.json:
+        write_json(rows, args.json)
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

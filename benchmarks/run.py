@@ -58,6 +58,17 @@ def main() -> None:
     bench_runtime.write_json(rt_rows, rt_out, parallel_x2=cal)
     print(f"# wrote {rt_out}")
 
+    print("# --- serving tier: replica reads vs locked master, per SLO ---")
+    from benchmarks import bench_serving
+    sv_rows = bench_serving.run()
+    for r in sv_rows:
+        all_rows.append(dict(r))
+        print(_csv_line(dict(r)))
+    sv_out = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "BENCH_serving.json")
+    bench_serving.write_json(sv_rows, sv_out)
+    print(f"# wrote {sv_out}")
+
     print("# --- kernel reference-path microbenchmarks ---")
     from benchmarks import bench_kernels
     for r in bench_kernels.run():

@@ -5,32 +5,39 @@ ring KV caches — the same prefill/serve steps the multi-pod dry-run lowers.
 
 With ``--ps``, serve reads from the *live parameter server* instead: workers
 stream SGD-style updates through the sharded runtime under a
-bounded-asynchronous policy while the main thread plays the serving tier,
-issuing Get()s against a live view and reporting read latency and freshness
-as the table converges.
+bounded-asynchronous policy while the main thread plays a serving client,
+issuing reads through the **read-replica gateway**
+(:mod:`repro.runtime.serving`) under a per-read staleness SLO and reporting
+latency, measured staleness, and escalations as the table converges.
 
-    PYTHONPATH=src python examples/serve_demo.py --ps [--policy ssp3]
+    PYTHONPATH=src python examples/serve_demo.py --ps [--policy ssp3] \
+        [--replicas 2] [--slo 3]
+
+``--slo`` is the per-read contract: an integer ``k`` means "at most ``k``
+clocks behind the master's applied vector clock" (the gateway serves from
+the cheapest replica whose vector clock qualifies, parks on a doorbell when
+none does, and escalates to the locked master shards at the deadline);
+``fresh`` sends every read to the master.  Every response is stamped with
+the staleness actually measured against the live vector clock, so the
+histogram printed at the end is of *observed* staleness, not requested.
+``--replicas 0`` bypasses the gateway and reads the live master shards
+directly (the pre-serving-tier behavior, useful as a baseline).
 
 Running the runtime across processes
 ------------------------------------
 
 ``--transport`` picks where the client processes live:
 
-* ``queue`` (default) — worker threads inside this interpreter; serving
-  reads hit a client process cache (read-my-writes view).
+* ``queue`` (default) — worker threads inside this interpreter;
 * ``proc`` / ``shm`` / ``tcp`` — every client process is a real forked OS
   process; per-row updates travel as batched multi-row frames over
   shared-memory rings (``shm``, the ``proc`` default) or loopback sockets
   (``tcp``), and the GIL no longer couples workers to each other or to the
-  serving tier.  Serving reads then hit the live master shards under
-  per-shard locks (the freshest possible view), and each client ships its
-  final cache back when it finishes.
+  serving tier.
 
-    PYTHONPATH=src python examples/serve_demo.py --ps --transport proc
-
-The same protocol runs in both regimes — ``tests/test_runtime_conformance``
-holds the final state equal to the event-driven simulator either way — so
-the transport is purely a deployment choice.
+The replica publish streams ride the matching serving transport (queue ->
+in-process channels, proc/shm -> shm rings + doorbells, tcp -> loopback
+sockets); the same frames and FIFO seq assertions as the write path.
 """
 import argparse
 import dataclasses
@@ -41,7 +48,7 @@ import numpy as np
 
 def run_ps_demo(args) -> None:
     from repro.core import bsp, cvap, ssp, vap
-    from repro.runtime import PSRuntime
+    from repro.runtime import FRESH, PSRuntime, ReadGateway
 
     policy = {"bsp": bsp(), "ssp3": ssp(3), "vap": vap(0.05),
               "cvap": cvap(3, 0.05)}[args.policy]
@@ -56,16 +63,28 @@ def run_ps_demo(args) -> None:
         g = (A[i].T @ (A[i] @ x - y[i])) / len(i)
         return {"x": -0.2 * g}
 
+    slo = args.slo if args.slo == FRESH else int(args.slo)
+    serving = {"queue": "queue", "proc": "shm", "shm": "shm",
+               "tcp": "tcp"}[args.transport]
     rt = PSRuntime(n_workers, policy, {"x": np.zeros(dim)}, n_shards=2,
                    threads_per_process=1, seed=0, transport=args.transport)
     print(f"serving from live PS runtime: {n_workers} workers, "
           f"policy {policy.kind}, {n_clocks} clocks, "
-          f"transport {args.transport}")
+          f"transport {args.transport}, {args.replicas} replicas "
+          f"({serving} publish streams), slo {slo!r}")
     rt.start(update_fn, n_clocks, timeout=300)
-    lat, t_next = [], time.perf_counter()
+    gw = (ReadGateway(rt, n_replicas=args.replicas, transport=serving)
+          if args.replicas > 0 else None)
+    lat, stale, esc = [], [], 0
+    t_next = time.perf_counter()
     while rt.running:
         t0 = time.perf_counter()
-        x = rt.read("x")                       # live Get() from the cache
+        if gw is None:
+            x = rt.read("x")               # locked live master read
+        else:
+            res = gw.read("x", slo=slo, timeout=5.0)
+            x, _ = res.value, stale.append(res.staleness)
+            esc += res.escalated
         lat.append(time.perf_counter() - t0)
         if time.perf_counter() >= t_next:
             obj = float(0.5 * np.mean((A @ x - y) ** 2))
@@ -73,13 +92,21 @@ def run_ps_demo(args) -> None:
             t_next = time.perf_counter() + 0.5
         time.sleep(1e-3)
     stats = rt.wait()
+    x_final = (gw.read("x", slo=0, timeout=10).value if gw is not None
+               else rt.read("x"))
     q = np.quantile(np.asarray(lat), [0.5, 0.95]) if lat else [0.0, 0.0]
-    obj = float(0.5 * np.mean((A @ rt.read('x') - y) ** 2))
+    obj = float(0.5 * np.mean((A @ x_final - y) ** 2))
     print(f"done: {stats.n_updates} updates in {stats.sim_time:.2f}s "
           f"({stats.n_updates / stats.sim_time:.0f} upd/s), "
           f"final objective {obj:.5f}")
     print(f"reads: {len(lat)} served, p50 {q[0]*1e6:.0f}us, "
           f"p95 {q[1]*1e6:.0f}us; violations: {len(stats.violations)}")
+    if gw is not None:
+        hist = np.bincount(np.asarray(stale, dtype=int) if stale else [0])
+        print(f"staleness observed (clocks->reads): "
+              f"{dict(enumerate(hist.tolist()))}; escalations {esc}; "
+              f"per-replica {gw.stats.reads_per_replica}")
+        gw.close()
 
 
 def main() -> None:
@@ -98,6 +125,12 @@ def main() -> None:
                          "client processes over the wire (see docstring)")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--clocks", type=int, default=150)
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="read replicas behind the gateway (0 = read the "
+                         "locked master shards directly, no serving tier)")
+    ap.add_argument("--slo", default="3",
+                    help='per-read staleness SLO: an integer k (clocks '
+                         'behind the master vector clock) or "fresh"')
     args = ap.parse_args()
     if args.ps:
         run_ps_demo(args)

@@ -105,6 +105,10 @@ class RunStats:
     n_updates: int = 0
     n_messages: int = 0
     bytes_sent: int = 0
+    # runtime VAP ack traffic: messages vs updates acked inside them — the
+    # coalescing ratio of the per-(client, shard, flush) ack batching
+    n_ack_msgs: int = 0
+    n_acked_updates: int = 0
     block_time_clock: float = 0.0
     block_time_value: float = 0.0
     max_observed_staleness: int = 0

@@ -12,22 +12,31 @@ client processes over loopback sockets / shared-memory rings
 with snapshot/restore of the master shard state in
 :mod:`repro.runtime.snapshot`.
 """
-from repro.runtime.messages import (AckMsg, Channel, ClockMarker, ClockMsg,
-                                    DeliverMsg, FullyDelivered, ProcDoneMsg,
-                                    ShardFinMsg, UpdateMsg)
+from repro.runtime.messages import (AckBatchMsg, AckMsg, Channel, ClockMarker,
+                                    ClockMsg, DeliverMsg, FullyDelivered,
+                                    ProcDoneMsg, ReplicaDeltaMsg,
+                                    ReplicaFinMsg, ReplicaStateMsg,
+                                    ReplicaVcMsg, ShardFinMsg, SubscribeMsg,
+                                    UnsubscribeMsg, UpdateMsg)
 from repro.runtime.runtime import (TRANSPORTS, ClientProcess, PSRuntime,
                                    RuntimeViewHandle)
+from repro.runtime.serving import (FRESH, ReadGateway, ReadResult, Replica,
+                                   ReplicaSet, SERVING_TRANSPORTS)
 from repro.runtime.shard import ServerShard
-from repro.runtime.snapshot import (load_snapshot, save_snapshot,
-                                    snapshot_params, take_snapshot)
+from repro.runtime.snapshot import (conservative_vc, load_snapshot,
+                                    save_snapshot, snapshot_params,
+                                    take_snapshot)
 from repro.runtime.transport import (FifoAssert, FrameDecoder, ShmRing,
-                                     WireChannel, encode_frame)
+                                     WireChannel, encode_frame, require_tso)
 
 __all__ = [
-    "AckMsg", "Channel", "ClientProcess", "ClockMarker", "ClockMsg",
-    "DeliverMsg", "FifoAssert", "FrameDecoder", "FullyDelivered",
-    "PSRuntime", "ProcDoneMsg", "RuntimeViewHandle", "ServerShard",
-    "ShardFinMsg", "ShmRing", "TRANSPORTS", "UpdateMsg", "WireChannel",
-    "encode_frame", "load_snapshot", "save_snapshot", "snapshot_params",
-    "take_snapshot",
+    "AckBatchMsg", "AckMsg", "Channel", "ClientProcess", "ClockMarker",
+    "ClockMsg", "DeliverMsg", "FRESH", "FifoAssert", "FrameDecoder",
+    "FullyDelivered", "PSRuntime", "ProcDoneMsg", "ReadGateway",
+    "ReadResult", "Replica", "ReplicaDeltaMsg", "ReplicaFinMsg",
+    "ReplicaSet", "ReplicaStateMsg", "ReplicaVcMsg", "RuntimeViewHandle",
+    "SERVING_TRANSPORTS", "ServerShard", "ShardFinMsg", "ShmRing",
+    "SubscribeMsg", "TRANSPORTS", "UnsubscribeMsg", "UpdateMsg",
+    "WireChannel", "conservative_vc", "encode_frame", "load_snapshot",
+    "require_tso", "save_snapshot", "snapshot_params", "take_snapshot",
 ]

@@ -12,11 +12,34 @@ Message flow (client process p, server shard s):
     p -> s : UpdateMsg   one hash-partitioned row-slice of an Inc
              ClockMsg    process p completed period `clock`
              AckMsg      a DeliverMsg was applied at p
+             AckBatchMsg coalesced acks: one frame per (client, shard, flush)
     s -> p : DeliverMsg  propagate an update part to a peer process cache
              ClockMarker shard-side echo of a peer's ClockMsg (frontier)
              FullyDelivered
                          every peer acked an update part — the origin
                          worker's unsynchronized accumulator may shrink
+
+Serving tier (read replica r, see :mod:`repro.runtime.serving`):
+
+    r -> s : SubscribeMsg / UnsubscribeMsg
+                         control messages carrying the shard->replica publish
+                         channel; always sent in-process (the shards and the
+                         serving tier both live in the parent), so holding a
+                         live channel object in the message is safe
+    s -> r : ReplicaStateMsg
+                         in-stream bootstrap: the shard's current dense
+                         partition in the snapshot payload format, stamped
+                         with the shard's applied vector clock
+             ReplicaDeltaMsg
+                         coalesced row deltas applied by the shard since the
+                         last publish cycle (rows may repeat: apply-additive)
+             ReplicaVcMsg
+                         the shard's applied per-process vector clock; FIFO
+                         after every delta it covers, so a replica holding
+                         vc[p] = c has applied all of p's updates ts <= c
+             ReplicaFinMsg
+                         unsubscribe acknowledged: nothing further will be
+                         published on this channel
 """
 from __future__ import annotations
 
@@ -60,6 +83,15 @@ class AckMsg:
 
 
 @dataclass
+class AckBatchMsg:
+    """All acks of one (client, shard) flush in a single message: the uids
+    travel as one int64 buffer instead of one AckMsg per delivered part."""
+    uids: np.ndarray         # int64 uids of the DeliverMsgs applied
+    process: int             # acking process
+    seq: int = -1
+
+
+@dataclass
 class DeliverMsg:
     uid: int
     worker: int
@@ -91,6 +123,81 @@ class FullyDelivered:
     key: str
     rows: np.ndarray
     delta: np.ndarray
+    shard: int
+    seq: int = -1
+
+
+# ---------------------------------------------------------------------------
+# serving-tier messages (read replicas, repro.runtime.serving)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SubscribeMsg:
+    """A read replica subscribes to a shard's publish stream.  ``channel``
+    is the live shard->replica publish channel (Channel or WireChannel) —
+    subscribe control always travels in-process (never over a wire), so the
+    object reference is valid at the shard.  With ``want_state`` the shard
+    first sends a :class:`ReplicaStateMsg` (in-stream bootstrap), then every
+    subsequent delta, all FIFO on the same channel."""
+    replica: int
+    channel: object
+    want_state: bool = True
+    seq: int = -1
+
+
+@dataclass
+class UnsubscribeMsg:
+    """Stop publishing to this replica; the shard answers with a final
+    :class:`ReplicaFinMsg` on the publish channel (FIFO-last), after which
+    the serving tier may safely tear the channel down."""
+    replica: int
+    seq: int = -1
+
+
+@dataclass
+class ReplicaStateMsg:
+    """In-stream bootstrap: the shard's dense partition at subscribe time,
+    in the snapshot payload format (``{key: {"rows", "values"}}``, exactly
+    :meth:`ServerShard.state`), stamped with the shard's applied vector
+    clock.  The replica scatters the rows into its full-key buffers — the
+    same re-partition path :func:`repro.runtime.snapshot.assemble_master`
+    uses — and adopts the stamp as its per-shard vector clock."""
+    shard: int
+    state: dict              # {key: {"rows": int64, "values": (n, C)}}
+    clock_vc: np.ndarray     # (n_proc,) applied frontier at snapshot point
+    seq: int = -1
+
+
+@dataclass
+class ReplicaDeltaMsg:
+    """Row deltas the shard applied since its last publish cycle, coalesced
+    per key (rows may repeat across source parts: apply with np.add.at)."""
+    shard: int
+    key: str
+    rows: np.ndarray         # global row ids
+    delta: np.ndarray        # (len(rows), C)
+    seq: int = -1
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.delta.nbytes)
+
+
+@dataclass
+class ReplicaVcMsg:
+    """The shard's applied per-process vector clock.  Sent FIFO after every
+    delta it covers: a replica whose vc for this shard is ``c`` at entry
+    ``p`` has applied every update of process p timestamped <= c that
+    touches this shard's rows."""
+    shard: int
+    clock_vc: np.ndarray     # (n_proc,)
+    seq: int = -1
+
+
+@dataclass
+class ReplicaFinMsg:
+    """Unsubscribe acknowledged: nothing further on this publish channel."""
     shard: int
     seq: int = -1
 

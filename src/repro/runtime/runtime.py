@@ -68,14 +68,22 @@ from repro.core import controller
 from repro.core.policies import Policy
 from repro.core.server import RunStats, UpdateMap
 from repro.runtime import transport as T
-from repro.runtime.messages import (SHUTDOWN, AckMsg, Channel, ClockMarker,
-                                    ClockMsg, DeliverMsg, FullyDelivered,
-                                    ProcDoneMsg, ShardFinMsg, UpdateMsg,
-                                    group_by_channel, pump_inbox)
+from repro.runtime.messages import (SHUTDOWN, AckBatchMsg, Channel,
+                                    ClockMarker, ClockMsg, DeliverMsg,
+                                    FullyDelivered, ProcDoneMsg, ShardFinMsg,
+                                    UpdateMsg, group_by_channel, pump_inbox)
 from repro.runtime.shard import ServerShard
 
 TRANSPORTS = ("queue", "tcp", "shm", "proc")
 _PROC_ALIAS = "shm"          # what transport="proc" resolves to
+
+
+def _ack_batches(pairs: List[Tuple[Channel, int]], pid: int
+                 ) -> List[Tuple[Channel, AckBatchMsg]]:
+    """[(shard chan, uid), ...] -> one coalesced :class:`AckBatchMsg` per
+    channel (VAP ack batching: a flush's acks share a single frame)."""
+    return [(chan, AckBatchMsg(np.asarray(uids, dtype=np.int64), pid))
+            for chan, uids in group_by_channel(pairs)]
 
 
 class ClientProcess:
@@ -104,7 +112,7 @@ class ClientProcess:
         self.staged: List[DeliverMsg] = []    # barrier_reads holding pen
         self.inbox: queue.Queue = queue.Queue()
         self._fifo = T.FifoAssert()           # per sender shard
-        self._acks: List[Tuple[Channel, AckMsg]] = []
+        self._acks: List[Tuple[Channel, int]] = []      # (shard chan, uid)
         self.thread = threading.Thread(
             target=self._loop, name=f"ps-proc-{pid}", daemon=True)
 
@@ -138,10 +146,12 @@ class ClientProcess:
                 except BaseException as e:
                     rt._record_error(e)
             self.cond.notify_all()
-        # acks leave after the lock is dropped, one frame per shard channel
+        # acks leave after the lock is dropped, coalesced into ONE AckBatch
+        # message per (client, shard, flush) — the uids travel as a single
+        # int64 buffer instead of one AckMsg per delivered part
         acks, self._acks = self._acks, []
-        for chan, msgs in group_by_channel(acks):
-            rt._send_many(chan, msgs)
+        for chan, batch in _ack_batches(acks, self.pid):
+            rt._send(chan, batch)
         # in-flight decrements strictly after the acks were enqueued, so the
         # quiesce wait never observes a transient 0 mid-conversation
         for _ in range(done):
@@ -164,8 +174,8 @@ class ClientProcess:
                 # acks only feed the VAP synchronized-update accounting;
                 # clock-only policies skip the whole ack cycle
                 if rt.policy.value_bounded:
-                    self._acks.append((rt._chan_ps[self.pid][msg.shard],
-                                       AckMsg(msg.uid, self.pid)))
+                    self._acks.append(
+                        (rt._chan_ps[self.pid][msg.shard], msg.uid))
         elif isinstance(msg, ClockMarker):
             # max(): the frontier may never regress (channel FIFO already
             # orders markers per (proc, shard); this makes it local)
@@ -183,11 +193,13 @@ class ClientProcess:
     def _apply_delivery(self, msg: DeliverMsg) -> None:
         self.cache[msg.key][msg.rows] += msg.delta
 
-    def release_staged(self, new_period: int) -> List[Tuple[Channel, AckMsg]]:
+    def release_staged(self, new_period: int
+                       ) -> List[Tuple[Channel, AckBatchMsg]]:
         """Apply staged deliveries now inside the staleness window.
 
         Caller holds ``self.cond`` (the ticking worker, at a period
-        boundary).  Returns the acks to send after the lock is dropped.
+        boundary).  Returns coalesced ack batches (one per shard channel)
+        to send after the lock is dropped.
         """
         acks, keep = [], []
         for msg in self.staged:
@@ -195,11 +207,11 @@ class ClientProcess:
                 self._apply_delivery(msg)
                 if self.rt.policy.value_bounded:
                     acks.append((self.rt._chan_ps[self.pid][msg.shard],
-                                 AckMsg(msg.uid, self.pid)))
+                                 msg.uid))
             else:
                 keep.append(msg)
         self.staged = keep
-        return acks
+        return _ack_batches(acks, self.pid)
 
 
 class RuntimeViewHandle:
@@ -395,7 +407,9 @@ class PSRuntime(_WorkerFlowMixin):
                  check_invariants: bool = True,
                  barrier_reads: bool = False,
                  transport: str = "queue",
-                 restore_from: Optional[dict] = None):
+                 restore_from: Optional[dict] = None,
+                 snapshot_every: int = 0,
+                 snapshot_dir: Optional[str] = None):
         if n_workers % threads_per_process:
             raise ValueError("n_workers must divide into processes evenly")
         if n_shards < 1:
@@ -405,6 +419,8 @@ class PSRuntime(_WorkerFlowMixin):
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}; "
                              f"choose from {TRANSPORTS}")
+        if snapshot_every < 0:
+            raise ValueError("snapshot_every must be >= 0 (0 disables)")
         self.transport_kind = _PROC_ALIAS if transport == "proc" else transport
         self._proc_mode = self.transport_kind != "queue"
         self.P = n_workers
@@ -440,6 +456,14 @@ class PSRuntime(_WorkerFlowMixin):
         self._errors: List[BaseException] = []
         self._qcond = threading.Condition()   # guards _inflight (queue mode)
         self._inflight = 0
+
+        # mid-run periodic snapshots: taken by the shard thread that moves
+        # the applied frontier across a multiple of `snapshot_every` clocks
+        self.snapshot_every = snapshot_every
+        self.snapshot_dir = snapshot_dir
+        self.snapshots: List[Tuple[int, dict]] = []
+        self._snap_lock = threading.Lock()
+        self._next_snap_clock = snapshot_every if snapshot_every else (1 << 62)
 
         self.shards = [ServerShard(self, s) for s in range(n_shards)]
         if restore_from is not None:
@@ -787,6 +811,40 @@ class PSRuntime(_WorkerFlowMixin):
         :mod:`repro.runtime.snapshot`)."""
         from repro.runtime.snapshot import take_snapshot
         return take_snapshot(self)
+
+    def _maybe_periodic_snapshot(self) -> None:
+        """Called by a shard thread after its applied vector clock moved:
+        take one snapshot each time the global applied frontier — completed
+        clocks fully applied on every shard by every process — crosses a
+        multiple of ``snapshot_every``.  Boundary-*triggered*, not
+        barrier-exact: updates of later periods already in flight may be
+        included, exactly like a parameter server checkpointing without a
+        barrier (snapshot.py module doc)."""
+        if not self.snapshot_every or self._finished:
+            return
+        # racy per-entry reads are fine: the frontier is monotone, so a
+        # stale read only delays the trigger to the next ClockMsg
+        done = min(int(s.clock_vc.min()) for s in self.shards) + 1
+        if done < self._next_snap_clock:
+            return
+        with self._snap_lock:
+            if done < self._next_snap_clock:   # another shard got here first
+                return
+            while self._next_snap_clock <= done:
+                self._next_snap_clock += self.snapshot_every
+            snap = self.snapshot()
+            self.snapshots.append((done, snap))
+            if self.snapshot_dir:
+                from repro.runtime.snapshot import save_snapshot
+                os.makedirs(self.snapshot_dir, exist_ok=True)
+                save_snapshot(os.path.join(self.snapshot_dir,
+                                           f"snap_c{done:06d}.npz"), snap)
+
+    def latest_snapshot(self) -> Optional[dict]:
+        """The most recent periodic snapshot, or None (serving-tier replica
+        bootstrap seeds from this before subscribing)."""
+        with self._snap_lock:
+            return self.snapshots[-1][1] if self.snapshots else None
 
     # ------------------------------------------------------------- checks
     def _final_checks(self) -> None:

@@ -1,0 +1,24 @@
+"""Read-replica serving tier for the PS runtime.
+
+The paper's bound, enforced on the *read* path: a :class:`ReplicaSet` of
+read replicas subscribes to the master shards' publish streams over the
+existing channel/transport layer (``queue`` | ``shm`` | ``tcp``), each
+replica tracking a per-shard vector clock of applied updates, and a
+:class:`ReadGateway` routes every read — under a client-declared SLO of
+``staleness <= k`` clocks or :data:`FRESH` — to the cheapest replica whose
+vector clock satisfies it, parking on a doorbell or escalating to the
+master when none does.  Every response is stamped with the staleness
+actually measured against the master's applied vector clock, so
+``tests/test_serving.py`` asserts the SLO was *honored* for SSP/VAP/CVAP
+under free interleavings, making the conformance story three-sided:
+simulator spec, write runtime, serving tier.
+"""
+from repro.runtime.serving.gateway import (FRESH, GatewayStats, ReadGateway,
+                                           ReadResult)
+from repro.runtime.serving.replica import (SERVING_TRANSPORTS, Replica,
+                                           ReplicaSet)
+
+__all__ = [
+    "FRESH", "GatewayStats", "ReadGateway", "ReadResult", "Replica",
+    "ReplicaSet", "SERVING_TRANSPORTS",
+]

@@ -1,0 +1,172 @@
+"""The read gateway: per-read staleness SLOs measured against the vector
+clock.
+
+Every read declares an SLO:
+
+  * ``slo=k`` (int >= 0) — the returned value may trail the master's
+    applied frontier by at most ``k`` clocks;
+  * ``slo="fresh"`` (:data:`FRESH`) — the read goes to the master shards
+    (per-shard-locked assembly of the authoritative blocks);
+  * ``slo=None`` — any replica qualifies; the response is still stamped.
+
+Routing: among the replicas whose vector clock satisfies the bound, the
+gateway picks the least-loaded (fewest served reads) and copies the value
+out under the replica lock.  It then **re-measures** against the live
+master vector clock sampled *after* the copy — an upper bound on the true
+staleness at serve time, since the master frontier only advances — and only
+returns if the conservative measure still meets the SLO; otherwise it tries
+again.  When no replica qualifies it parks on the replica set's doorbell
+(a condition the ingest threads ring whenever a vector clock advances — a
+real kernel sleep, not sub-ms polling) and, at the deadline, **escalates to
+the master**, so the SLO is met by construction and the stamp on every
+:class:`ReadResult` lets tests assert it was *honored*, not just requested.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+from repro.runtime.serving.replica import ReplicaSet
+
+FRESH = "fresh"                  # sentinel SLO: serve the master state
+Slo = Union[int, str, None]
+
+
+@dataclass
+class ReadResult:
+    """One served read, stamped with how stale it actually was."""
+    value: np.ndarray            # in the key's original shape
+    key: str
+    source: str                  # "replica:<rid>" or "master"
+    staleness: int               # measured clocks behind the master vc
+    slo: Slo                     # what the client asked for
+    escalated: bool              # no replica qualified before the deadline
+    waited_s: float              # wall time from request to response
+
+
+@dataclass
+class GatewayStats:
+    n_reads: int = 0
+    n_replica_reads: int = 0
+    n_master_reads: int = 0      # fresh SLO + escalations
+    n_escalations: int = 0
+    max_served_staleness: int = 0
+    block_time: float = 0.0      # time actually parked on the doorbell only
+    reads_per_replica: Dict[int, int] = field(default_factory=dict)
+
+
+class ReadGateway:
+    """SLO-routed serving reads over a :class:`ReplicaSet`.
+
+    Thread-safe: any number of client threads may call :meth:`read`
+    concurrently (the serving copy happens under the chosen replica's lock,
+    stats under the gateway's own).
+    """
+
+    def __init__(self, rt, n_replicas: int = 2, transport: str = "queue",
+                 check: bool = True, bootstrap_from_snapshot: bool = False,
+                 replica_set: Optional[ReplicaSet] = None):
+        self.rt = rt
+        self.replicas = replica_set if replica_set is not None else ReplicaSet(
+            rt, n_replicas, transport=transport, check=check,
+            bootstrap_from_snapshot=bootstrap_from_snapshot)
+        self.stats = GatewayStats()
+        self._slock = threading.Lock()
+
+    # ---------------------------------------------------------------- reads
+    def read(self, key: str, slo: Slo = None,
+             timeout: float = 30.0) -> ReadResult:
+        """Serve one read under the declared staleness SLO (module doc)."""
+        t0 = time.monotonic()
+        if slo == FRESH:
+            return self._serve_master(key, slo, t0, escalated=False)
+        bound = float("inf") if slo is None else int(slo)
+        if bound < 0:
+            raise ValueError(f"slo must be >= 0 or {FRESH!r}, got {slo!r}")
+        deadline = t0 + timeout
+        rset = self.replicas
+        fails = 0
+        blocked = 0.0
+        while True:
+            with rset.cond:
+                v0 = rset.version
+            res = self._try_replicas(key, bound, slo, t0)
+            if res is not None:
+                break
+            fails += 1
+            now = time.monotonic()
+            if now >= deadline:
+                res = self._serve_master(key, slo, t0, escalated=True)
+                break
+            with rset.cond:
+                # version guard: a doorbell rung during the FIRST failed
+                # attempt retries immediately instead of sleeping through
+                # it; after that, retries are paced by the doorbell itself
+                # (one per notify), else a hot vc under heavy write traffic
+                # turns waiting readers into a GIL-burning retry storm that
+                # starves the very ingest threads they are waiting on
+                if rset.version == v0 or fails >= 2:
+                    t_w = time.monotonic()
+                    rset.cond.wait(min(0.25, deadline - now))
+                    blocked += time.monotonic() - t_w
+        if blocked:
+            with self._slock:
+                self.stats.block_time += blocked
+        return res
+
+    def _try_replicas(self, key: str, bound: float, slo: Slo,
+                      t0: float) -> Optional[ReadResult]:
+        rset = self.replicas
+        mvc = rset.master_vc()
+        # least-loaded first; the racy .reads peek only orders candidates
+        for rep in sorted(rset.replicas, key=lambda r: r.reads):
+            if rep.poisoned:
+                continue                       # ingest failed: never serve
+            if rset.staleness(rep.vc, mvc) > bound:
+                continue                       # cheap unlocked pre-filter
+            value, rvc = rep.serve(key)
+            # conservative stamp: master vc sampled AFTER the copy can only
+            # be ahead of the frontier at copy time, so measured >= true
+            lag = rset.staleness(rvc, rset.master_vc())
+            if lag > bound:                    # master advanced mid-copy
+                continue
+            with self._slock:
+                self.stats.n_reads += 1
+                self.stats.n_replica_reads += 1
+                self.stats.max_served_staleness = max(
+                    self.stats.max_served_staleness, lag)
+                self.stats.reads_per_replica[rep.rid] = (
+                    self.stats.reads_per_replica.get(rep.rid, 0) + 1)
+            return ReadResult(value.reshape(self.rt._shapes[key]), key,
+                              f"replica:{rep.rid}", lag, slo, False,
+                              time.monotonic() - t0)
+        return None
+
+    def _serve_master(self, key: str, slo: Slo, t0: float,
+                      escalated: bool) -> ReadResult:
+        value = self.rt.master_value(key)      # per-shard-locked assembly
+        with self._slock:
+            self.stats.n_reads += 1
+            self.stats.n_master_reads += 1
+            if escalated:
+                self.stats.n_escalations += 1
+        return ReadResult(value, key, "master", 0, slo, escalated,
+                          time.monotonic() - t0)
+
+    # ------------------------------------------------------------- lifecycle
+    def add_replica(self, bootstrap_from_snapshot: bool = False):
+        return self.replicas.add_replica(
+            bootstrap_from_snapshot=bootstrap_from_snapshot)
+
+    def close(self, timeout: float = 10.0) -> None:
+        self.replicas.close(timeout=timeout)
+
+    def __enter__(self) -> "ReadGateway":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

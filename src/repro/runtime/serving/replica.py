@@ -1,0 +1,323 @@
+"""Read replicas of the PS serving tier.
+
+A :class:`ReplicaSet` holds N :class:`Replica` objects, each subscribed to
+every master shard's publish stream over one of the serving transports:
+
+  * ``queue`` — in-process FIFO :class:`~repro.runtime.messages.Channel`
+    edges (shard thread -> replica inbox);
+  * ``shm``   — the shard writes framed batches into a single-producer
+    shared-memory ring with a pipe doorbell, a reader thread drains it into
+    the replica inbox (same :class:`~repro.runtime.transport.ShmRing` /
+    :class:`~repro.runtime.transport.WireChannel` machinery as the
+    multi-process runtime transport; refuses weakly-ordered ISAs via
+    :func:`~repro.runtime.transport.require_tso`);
+  * ``tcp``   — the same frames over a loopback socket per (shard, replica).
+
+Consistency accounting.  Each replica keeps a **per-shard vector clock**
+``vc[s, p]`` — the highest period of client process ``p`` whose updates it
+has applied for shard ``s``'s rows, adopted from the ``ReplicaVcMsg``
+stamps the shard publishes FIFO-behind the deltas they cover.  The master's
+authoritative frontier is the live per-shard applied vector clock
+(:meth:`ServerShard.vc_snapshot`), so a read's **measured staleness** is
+
+    max over shards s, processes p of (master_vc[s, p] - replica_vc[s, p])
+
+in clock units — 0 means the replica has applied everything the master
+shards have.  Extra freshness (deltas of periods past the vc) is allowed,
+exactly like every bounded-staleness read in the paper; missing covered
+updates are impossible because the stamp is FIFO-behind them.
+
+Bootstrap.  A replica joining mid-run is seeded **in-stream**: the shard
+answers its Subscribe with the current dense partition in the snapshot
+payload format (:class:`ReplicaStateMsg` — the same per-shard dict
+:meth:`ServerShard.state` / :mod:`repro.runtime.snapshot` use), stamped with
+the shard's vc, before any further delta on that channel, so the replica's
+view of that partition is exact from the first frame.  Optionally the
+replica warm-starts from the runtime's latest **periodic snapshot**
+(``PSRuntime(snapshot_every=k)``), assembled through the snapshot module's
+re-partition path, so it can serve honestly-stamped stale reads before the
+(larger) in-stream states arrive.
+"""
+from __future__ import annotations
+
+import os
+import queue
+import socket
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime import snapshot as SNAP
+from repro.runtime import transport as T
+from repro.runtime.messages import (SHUTDOWN, Channel, ReplicaDeltaMsg,
+                                    ReplicaFinMsg, ReplicaStateMsg,
+                                    ReplicaVcMsg, SubscribeMsg,
+                                    UnsubscribeMsg, pump_inbox)
+
+SERVING_TRANSPORTS = ("queue", "shm", "tcp")
+
+
+class Replica:
+    """One read replica: full-key value buffers + per-shard vector clock,
+    fed by a comm thread draining the shard publish streams."""
+
+    def __init__(self, rset: "ReplicaSet", rid: int,
+                 seed_snapshot: Optional[dict] = None):
+        rt = rset.rt
+        self.rset = rset
+        self.rid = rid
+        self.lock = threading.Lock()        # guards values / vc / counters
+        if seed_snapshot is not None:
+            # warm start from a periodic snapshot: full values through the
+            # snapshot module's re-partition path + a conservative vc seed
+            master = SNAP.assemble_master(seed_snapshot)
+            if set(master) != set(rt._x0):
+                raise ValueError("bootstrap snapshot keys do not match "
+                                 "the runtime's")
+            self.values: Dict[str, np.ndarray] = {
+                k: master[k].astype(np.float64, copy=True) for k in rt._x0}
+            self.vc = SNAP.conservative_vc(seed_snapshot, rt.n_shards,
+                                           rt.n_proc)
+        else:
+            self.values = {k: v.copy() for k, v in rt._x0.items()}
+            self.vc = np.full((rt.n_shards, rt.n_proc), -1, dtype=np.int64)
+        self.inbox: queue.Queue = queue.Queue()
+        self.fins: set = set()              # shards that acked unsubscribe
+        self.poisoned = False               # ingest failed: out of rotation
+        self.reads = 0                      # served reads (routing cost)
+        self.deltas_applied = 0
+        self.bytes_ingested = 0
+        self._fifo = T.FifoAssert()         # per publishing shard
+        self.thread = threading.Thread(target=self._loop,
+                                       name=f"ps-replica-{rid}", daemon=True)
+
+    # ------------------------------------------------------------ ingest
+    def _loop(self) -> None:
+        pump_inbox(self.inbox, self._handle_batch)
+
+    def _handle_batch(self, batch: list) -> bool:
+        vc_moved = False
+        shutdown = False
+        with self.lock:
+            for msg in batch:
+                if msg is SHUTDOWN:
+                    shutdown = True
+                    break
+                try:
+                    vc_moved |= self._handle(msg)
+                except BaseException as e:
+                    # a partially applied message breaks the vc invariant
+                    # ("vc[p]=c => every update <= c applied"): take this
+                    # replica out of the serving rotation for good rather
+                    # than stamping corrupt values as fresh
+                    self.poisoned = True
+                    self.rset._record_error(e)
+        if vc_moved:
+            self.rset._notify()             # gateway doorbell
+        return shutdown
+
+    def _handle(self, msg) -> bool:
+        """Apply one publish message; returns True if the vc moved.
+        Caller holds ``self.lock``."""
+        if self.rset.check:
+            err = self._fifo.check(msg.shard, msg.seq)
+            if err:
+                self.rset._violation(
+                    f"FIFO violation: shard {msg.shard}->replica "
+                    f"{self.rid} {err}")
+        if isinstance(msg, ReplicaDeltaMsg):
+            # rows may repeat across coalesced source parts: accumulate
+            np.add.at(self.values[msg.key], msg.rows, msg.delta)
+            self.deltas_applied += 1
+            self.bytes_ingested += msg.nbytes
+            return False
+        if isinstance(msg, ReplicaVcMsg):
+            np.maximum(self.vc[msg.shard], msg.clock_vc,
+                       out=self.vc[msg.shard])
+            return True
+        if isinstance(msg, ReplicaStateMsg):
+            # in-stream bootstrap: overwrite this shard's partition rows
+            # wholesale (exact cut), adopt the stamped vc
+            for key, part in msg.state.items():
+                self.values[key][part["rows"]] = part["values"]
+            np.maximum(self.vc[msg.shard], msg.clock_vc,
+                       out=self.vc[msg.shard])
+            return True
+        if isinstance(msg, ReplicaFinMsg):
+            self.fins.add(msg.shard)
+            return True                     # wakes close()'s fin wait
+        raise TypeError(f"replica {self.rid}: unexpected message {msg!r}")
+
+    # ------------------------------------------------------------ serving
+    def serve(self, key: str) -> Tuple[np.ndarray, np.ndarray]:
+        """Copy-out read: (flat value, vc at the moment of the copy)."""
+        with self.lock:
+            self.reads += 1
+            return self.values[key].copy(), self.vc.copy()
+
+
+class ReplicaSet:
+    """N read replicas subscribed to a :class:`PSRuntime`'s master shards.
+
+    Lives in the runtime's parent process under every runtime transport
+    (the shards always do too); the *serving* transport only picks the wire
+    the publish stream rides on.  ``close()`` unsubscribes (the shard
+    answers with a FIFO-last ``ReplicaFinMsg``), then tears the channels
+    down — safe mid-run or after the runtime quiesced.
+    """
+
+    def __init__(self, rt, n_replicas: int = 2, transport: str = "queue",
+                 check: bool = True, bootstrap_from_snapshot: bool = False):
+        if transport not in SERVING_TRANSPORTS:
+            raise ValueError(f"unknown serving transport {transport!r}; "
+                             f"choose from {SERVING_TRANSPORTS}")
+        if transport == "shm":
+            T.require_tso("the shm serving transport")
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.rt = rt
+        self.transport = transport
+        self.check = check
+        self.cond = threading.Condition()   # doorbell: rings on vc advance
+        self.version = 0                    # bumps with every ring (guards
+        self.replicas: List[Replica] = []   # against missed wakeups)
+        self.violations: List[str] = []
+        self.errors: List[BaseException] = []
+        self._vlock = threading.Lock()
+        self._closing = False
+        self._closed = False
+        self._next_rid = 0
+        # control edges into the shard inboxes (in-process by construction)
+        self._ctrl = [Channel(f"serve->s{s.sid}", s.inbox) for s in rt.shards]
+        self._edges: Dict[Tuple[int, int], dict] = {}
+        # ring sized so a whole in-stream bootstrap state frame fits
+        state_bytes = sum(v.nbytes + 8 * v.shape[0] + 4096
+                          for v in rt._x0.values())
+        self._cap = max(1 << 20, 4 * state_bytes)
+        for _ in range(n_replicas):
+            self.add_replica(bootstrap_from_snapshot=bootstrap_from_snapshot)
+
+    # -------------------------------------------------------------- plumbing
+    def _notify(self) -> None:
+        with self.cond:
+            self.version += 1
+            self.cond.notify_all()
+
+    def _violation(self, text: str) -> None:
+        with self._vlock:
+            self.violations.append(text)
+
+    def _record_error(self, e: BaseException) -> None:
+        if self._closing:
+            return                          # teardown races are expected
+        with self._vlock:
+            self.errors.append(e)
+
+    # ------------------------------------------------------------- topology
+    def add_replica(self, bootstrap_from_snapshot: bool = False) -> Replica:
+        """Create a replica and subscribe it to every shard (mid-run safe).
+
+        With ``bootstrap_from_snapshot`` the replica warm-starts from the
+        runtime's latest periodic snapshot (``snapshot_every``) when one
+        exists; the in-stream per-shard state it receives on subscribe then
+        supersedes the snapshot partition-by-partition, so the final view
+        is exact either way.
+        """
+        if self._closed:
+            raise RuntimeError("replica set is closed")
+        snap = self.rt.latest_snapshot() if bootstrap_from_snapshot else None
+        rid = self._next_rid
+        self._next_rid += 1
+        rep = Replica(self, rid, seed_snapshot=snap)
+        rep.thread.start()
+        for sid, shard in enumerate(self.rt.shards):
+            chan = self._make_channel(rep, sid)
+            self.rt._send(self._ctrl[sid],
+                          SubscribeMsg(rid, chan, want_state=True))
+        self.replicas.append(rep)
+        return rep
+
+    def _make_channel(self, rep: Replica, sid: int):
+        """The shard->replica publish edge for the chosen transport."""
+        name = f"s{sid}->r{rep.rid}"
+        if self.transport == "queue":
+            self._edges[(rep.rid, sid)] = {"kind": "queue"}
+            return Channel(name, rep.inbox)
+        if self.transport == "shm":
+            ring = T.ShmRing.create(self._cap)
+            bell_r, bell_w = os.pipe()
+            os.set_blocking(bell_w, False)
+            stop = threading.Event()
+            reader = T.start_reader(
+                f"rx-{name}", T.ring_reader(ring, bell_r, stop),
+                rep.inbox, self._record_error)
+            self._edges[(rep.rid, sid)] = {
+                "kind": "shm", "ring": ring, "bell": (bell_r, bell_w),
+                "stop": stop, "reader": reader}
+            return T.WireChannel(name, T.ring_writer(ring, bell_w),
+                                 max_frame=self._cap // 2)
+        # tcp: a real loopback socket per (shard, replica)
+        lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        lsock.bind(("127.0.0.1", 0))
+        lsock.listen(1)
+        w_sock = socket.create_connection(lsock.getsockname(), timeout=30)
+        r_sock, _ = lsock.accept()
+        lsock.close()
+        w_conn, r_conn = T.TcpConn(w_sock), T.TcpConn(r_sock)
+        reader = T.start_reader(f"rx-{name}", r_conn.read_chunk,
+                                rep.inbox, self._record_error)
+        self._edges[(rep.rid, sid)] = {
+            "kind": "tcp", "w": w_conn, "r": r_conn, "reader": reader}
+        return T.WireChannel(name, w_conn.write)
+
+    # ---------------------------------------------------------- vc plumbing
+    def master_vc(self) -> np.ndarray:
+        """The live per-shard applied vector clocks, stacked (S, P)."""
+        return np.stack([s.vc_snapshot() for s in self.rt.shards])
+
+    @staticmethod
+    def staleness(replica_vc: np.ndarray, master_vc: np.ndarray) -> int:
+        """Clocks the replica trails the master frontier (0 = caught up)."""
+        return max(int((master_vc - replica_vc).max()), 0)
+
+    # ------------------------------------------------------------- teardown
+    def close(self, timeout: float = 10.0) -> None:
+        """Unsubscribe every replica, wait for the shard fins, tear down."""
+        if self._closed:
+            return
+        self._closed = True
+        alive = [s for s in self.rt.shards if s.thread.is_alive()]
+        for rep in self.replicas:
+            for s in alive:
+                self.rt._send(self._ctrl[s.sid], UnsubscribeMsg(rep.rid))
+        # fins are published FIFO-last: once they land, nothing further
+        # will ever be written on the publish channels
+        need = {s.sid for s in alive}
+        deadline = time.monotonic() + timeout
+        with self.cond:
+            while (any(not need <= rep.fins for rep in self.replicas)
+                   and time.monotonic() < deadline):
+                self.cond.wait(0.25)
+        self._closing = True
+        for rep in self.replicas:
+            rep.inbox.put(SHUTDOWN)
+        for rep in self.replicas:
+            rep.thread.join(timeout=5.0)
+        for (rid, sid), edge in self._edges.items():
+            if edge["kind"] == "shm":
+                edge["stop"].set()
+                T.ShmEdge.ring_bell(edge["bell"][1])
+                edge["reader"].join(timeout=5.0)
+                edge["ring"].close()
+                edge["ring"].unlink()
+                for fd in edge["bell"]:
+                    try:
+                        os.close(fd)
+                    except OSError:
+                        pass
+            elif edge["kind"] == "tcp":
+                edge["w"].close()           # FIN ends the reader loop
+                edge["reader"].join(timeout=5.0)
+                edge["r"].close()

@@ -30,6 +30,17 @@ client sends :class:`ProcDoneMsg` after its last clock; once every process
 is done and ``pending``/``queued`` have drained, the shard broadcasts
 :class:`ShardFinMsg` (FIFO-after everything else it will ever send), which
 is the client's signal that its inbound stream is complete.
+
+Serving tier (:mod:`repro.runtime.serving`): the shard additionally keeps
+``clock_vc`` — its **applied vector clock** over client processes
+(``clock_vc[p]`` = highest period of p whose updates this shard has applied;
+exact because ClockMsg is FIFO-after the period's updates on the p->shard
+channel) — and publishes to subscribed read replicas: coalesced per-key row
+deltas after every apply cycle, followed by a ``ReplicaVcMsg`` stamp, all
+FIFO on the per-replica publish channel.  A replica subscribing mid-run is
+bootstrapped **in-stream**: the shard answers with its current dense
+partition (snapshot payload format) plus vc stamp before any further delta,
+so the replica's view is exact from the first frame it applies.
 """
 from __future__ import annotations
 
@@ -41,10 +52,12 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import controller
-from repro.runtime.messages import (SHUTDOWN, AckMsg, Channel, ClockMarker,
-                                    ClockMsg, DeliverMsg, FullyDelivered,
-                                    ProcDoneMsg, ShardFinMsg, UpdateMsg,
-                                    group_by_channel, pump_inbox)
+from repro.runtime.messages import (SHUTDOWN, AckBatchMsg, AckMsg, Channel,
+                                    ClockMarker, ClockMsg, DeliverMsg,
+                                    FullyDelivered, ProcDoneMsg, ReplicaDeltaMsg,
+                                    ReplicaFinMsg, ReplicaStateMsg, ReplicaVcMsg,
+                                    ShardFinMsg, SubscribeMsg, UnsubscribeMsg,
+                                    UpdateMsg, group_by_channel, pump_inbox)
 from repro.runtime.transport import FifoAssert
 
 _BATCH = 256        # max messages coalesced per apply/dispatch cycle
@@ -72,6 +85,12 @@ class ServerShard:
         self._done_procs: set = set()      # multi-process quiesce, leg 1
         self._fin_sent = False
         self._outbox: List[Tuple[Channel, object]] = []
+        # serving tier: applied per-process vector clock (guarded by .lock
+        # for consistent reads from the gateway) + replica publish channels
+        self.clock_vc = np.full(rt.n_proc, -1, dtype=np.int64)
+        self.subscribers: Dict[int, object] = {}   # replica id -> channel
+        self._pub: Dict[int, List[object]] = {}    # pending publish per replica
+        self._vc_dirty = False
         self.thread = threading.Thread(
             target=self._loop, name=f"ps-shard-{sid}", daemon=True)
 
@@ -111,6 +130,7 @@ class ServerShard:
             self._flush_updates(run)
             if rt._proc_mode and not shutdown:
                 self._maybe_fin()
+            self._flush_publish()
         except BaseException as e:
             rt._record_error(e)
         self._flush_outbox()
@@ -137,8 +157,23 @@ class ServerShard:
     def _handle(self, msg) -> None:
         rt = self.rt
         if isinstance(msg, AckMsg):
-            self._on_ack(msg)
+            with rt._slock:
+                rt.stats.n_ack_msgs += 1
+                rt.stats.n_acked_updates += 1
+            self._ack_uid(msg.uid)
+        elif isinstance(msg, AckBatchMsg):
+            with rt._slock:
+                rt.stats.n_ack_msgs += 1
+                rt.stats.n_acked_updates += len(msg.uids)
+            for uid in msg.uids:
+                self._ack_uid(int(uid))
         elif isinstance(msg, ClockMsg):
+            # applied vector clock: the process's period-<=clock updates are
+            # FIFO-before this message, so they are already in .dense
+            with self.lock:
+                self.clock_vc[msg.process] = max(
+                    self.clock_vc[msg.process], msg.clock)
+            self._vc_dirty = True
             # echo the period-completed marker to every peer.  All of the
             # process's period-<=clock updates precede this message on the
             # same FIFO channel, so their DeliverMsgs are already enqueued
@@ -147,6 +182,10 @@ class ServerShard:
                 if q != msg.process:
                     self._send(rt._chan_sp[self.sid][q],
                                ClockMarker(msg.process, self.sid, msg.clock))
+        elif isinstance(msg, SubscribeMsg):
+            self._on_subscribe(msg)
+        elif isinstance(msg, UnsubscribeMsg):
+            self._on_unsubscribe(msg)
         elif isinstance(msg, ProcDoneMsg):
             self._done_procs.add(msg.process)
         else:
@@ -169,11 +208,17 @@ class ServerShard:
                     m = msgs[0]
                     # rows are unique within one part: plain fancy-index add
                     dense[m.rows // rt.n_shards] += m.delta
+                    rows, delta = m.rows, m.delta
                 else:
                     rows = np.concatenate([m.rows for m in msgs])
                     delta = np.concatenate([m.delta for m in msgs])
                     # rows may repeat across parts: np.add.at accumulates
                     np.add.at(dense, rows // rt.n_shards, delta)
+                # serving: one coalesced delta per key per cycle per replica
+                # (global row ids; the arrays are shared — receivers only read)
+                for rid in self.subscribers:
+                    self._pub.setdefault(rid, []).append(
+                        ReplicaDeltaMsg(self.sid, key, rows, delta))
         for msg in run:
             self._route_delivery(msg)
 
@@ -217,14 +262,14 @@ class ServerShard:
         if track:
             self.pending[msg.uid] = (msg, n)
 
-    def _on_ack(self, ack: AckMsg) -> None:
+    def _ack_uid(self, uid: int) -> None:
         rt = self.rt
-        msg, remaining = self.pending[ack.uid]
+        msg, remaining = self.pending[uid]
         remaining -= 1
         if remaining > 0:
-            self.pending[ack.uid] = (msg, remaining)
+            self.pending[uid] = (msg, remaining)
             return
-        del self.pending[ack.uid]
+        del self.pending[uid]
         hs = self.halfsync[msg.key]
         res = hs[msg.rows] - np.abs(msg.delta)
         hs[msg.rows] = np.where(np.abs(res) < 1e-12, 0.0, res)
@@ -257,6 +302,54 @@ class ServerShard:
         self._fin_sent = True
         for q in range(rt.n_proc):
             self._send(rt._chan_sp[self.sid][q], ShardFinMsg(self.sid))
+
+    # ------------------------------------------------------- serving tier
+    def vc_snapshot(self) -> np.ndarray:
+        """The applied per-process vector clock (consistent copy)."""
+        with self.lock:
+            return self.clock_vc.copy()
+
+    def _on_subscribe(self, msg: SubscribeMsg) -> None:
+        """Register a replica publish channel; bootstrap in-stream.
+
+        The state payload and the vc stamp are taken in the shard thread, so
+        they form an exact cut: every delta published afterwards is FIFO
+        behind them on this channel."""
+        chan = msg.channel
+        if msg.want_state:
+            chan.send(ReplicaStateMsg(self.sid, self.state(),
+                                      self.vc_snapshot()))
+        else:
+            chan.send(ReplicaVcMsg(self.sid, self.vc_snapshot()))
+        self.subscribers[msg.replica] = chan
+
+    def _on_unsubscribe(self, msg: UnsubscribeMsg) -> None:
+        chan = self.subscribers.pop(msg.replica, None)
+        if chan is None:
+            return
+        # flush this replica's pending publishes FIFO-before the fin
+        msgs = self._pub.pop(msg.replica, [])
+        msgs.append(ReplicaFinMsg(self.sid))
+        chan.send_many(msgs)
+
+    def _flush_publish(self) -> None:
+        """Publish this cycle's coalesced deltas + (if the applied frontier
+        moved) a vector-clock stamp to every subscribed replica.  Publish
+        channels are serving-owned: sends bypass the runtime's in-flight
+        quiesce accounting on purpose."""
+        vc_dirty, self._vc_dirty = self._vc_dirty, False
+        if self.subscribers:
+            stamp = self.vc_snapshot() if vc_dirty else None
+            for rid, chan in self.subscribers.items():
+                msgs = self._pub.pop(rid, [])
+                if stamp is not None:
+                    msgs.append(ReplicaVcMsg(self.sid, stamp))
+                if msgs:
+                    chan.send_many(msgs)
+        elif self._pub:
+            self._pub.clear()
+        if vc_dirty:
+            self.rt._maybe_periodic_snapshot()
 
     # ------------------------------------------------------------- snapshots
     def read_rows(self, key: str, out: np.ndarray) -> None:

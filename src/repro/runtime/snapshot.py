@@ -34,12 +34,22 @@ SNAPSHOT_VERSION = 1
 
 
 def take_snapshot(rt) -> dict:
-    """Capture master shard state of a :class:`PSRuntime` (see module doc)."""
+    """Capture master shard state of a :class:`PSRuntime` (see module doc).
+
+    Besides the dense row blocks, the snapshot is stamped with each shard's
+    applied per-process vector clock (``clock_vcs``) and the completed-clock
+    frontier those vcs imply (``clock``) — what lets a serving-tier replica
+    seeded from a snapshot report an honest staleness before its in-stream
+    bootstrap arrives."""
+    vcs = [s.vc_snapshot() for s in rt.shards]
     return {
         "version": SNAPSHOT_VERSION,
         "n_shards": rt.n_shards,
+        "n_proc": rt.n_proc,
+        "clock": min(int(vc.min()) for vc in vcs) + 1,
         "shapes": {k: tuple(v) for k, v in rt._shapes.items()},
         "shards": [s.state() for s in rt.shards],
+        "clock_vcs": vcs,
     }
 
 
@@ -61,6 +71,21 @@ def assemble_master(snap: dict) -> Dict[str, np.ndarray]:
                              f"{seen}/{full.shape[0]} rows")
         out[key] = full
     return out
+
+
+def conservative_vc(snap: dict, n_shards: int, n_proc: int) -> np.ndarray:
+    """Per-(shard, process) vector-clock seed for a serving-tier replica
+    bootstrapping from this snapshot: the per-process minimum across the
+    snapshot's shards, broadcast to ``n_shards``.  A valid lower bound for
+    every current shard even when the shard count changed since the snapshot
+    (the same re-partition-safety argument as :func:`assemble_master`);
+    falls back to the all ``-1`` vc when the snapshot predates vc stamping
+    or the process count differs."""
+    vcs = snap.get("clock_vcs")
+    if not vcs or snap.get("n_proc") != n_proc:
+        return np.full((n_shards, n_proc), -1, dtype=np.int64)
+    lo = np.min(np.stack(vcs), axis=0)
+    return np.tile(lo, (n_shards, 1)).astype(np.int64)
 
 
 def snapshot_params(snap: dict) -> Dict[str, np.ndarray]:
@@ -99,6 +124,8 @@ def save_snapshot(path, snap: dict) -> None:
     header = {
         "version": snap["version"],
         "n_shards": snap["n_shards"],
+        "n_proc": snap.get("n_proc"),
+        "clock": snap.get("clock"),
         "keys": keys,
         "shapes": {k: list(snap["shapes"][k]) for k in keys},
     }
@@ -108,6 +135,8 @@ def save_snapshot(path, snap: dict) -> None:
         for ki, key in enumerate(keys):
             arrays[f"s{sid}_k{ki}_rows"] = part[key]["rows"]
             arrays[f"s{sid}_k{ki}_values"] = part[key]["values"]
+    for sid, vc in enumerate(snap.get("clock_vcs") or []):
+        arrays[f"s{sid}_vc"] = vc
     np.savez(path, **arrays)
 
 
@@ -117,15 +146,25 @@ def load_snapshot(path) -> dict:
         header = json.loads(bytes(z["header"].tobytes()).decode())
         keys = header["keys"]
         shards = []
+        vcs = []
         for sid in range(header["n_shards"]):
             part = {}
             for ki, key in enumerate(keys):
                 part[key] = {"rows": z[f"s{sid}_k{ki}_rows"],
                              "values": z[f"s{sid}_k{ki}_values"]}
             shards.append(part)
-    return {
+            if f"s{sid}_vc" in z:
+                vcs.append(z[f"s{sid}_vc"])
+    out = {
         "version": header["version"],
         "n_shards": header["n_shards"],
         "shapes": {k: tuple(s) for k, s in header["shapes"].items()},
         "shards": shards,
     }
+    if header.get("n_proc") is not None:
+        out["n_proc"] = header["n_proc"]
+    if header.get("clock") is not None:
+        out["clock"] = header["clock"]
+    if vcs:
+        out["clock_vcs"] = vcs
+    return out

@@ -27,16 +27,22 @@ FIFO.  Channels stamp per-channel sequence numbers under a lock exactly like
 the in-process queues; receivers assert contiguity via :class:`FifoAssert`,
 so a reordering (or replaying) transport is *detected*, not assumed away.
 
-Portability.  The shm ring's lock-free cursor protocol assumes total store
-ordering (x86/x86-64); on weakly-ordered ISAs (aarch64) the cursors would
-need real barriers, which pure Python cannot express — use the ``tcp``
-backend there (the FrameDecoder's short-frame errors and the FIFO asserts
-would flag the corruption rather than silently accepting it).
+Portability.  The shm ring's lock-free cursor protocol assumes **total
+store ordering** (x86/x86-64): the producer's data memcpy must become
+visible to the consumer no later than the cursor store that publishes it,
+and vice versa for the consumer's head update.  On weakly-ordered ISAs
+(aarch64/arm64) the stores can be reordered by the hardware, the cursors
+would need real acquire/release barriers, and pure Python cannot express
+them — so :func:`require_tso` *refuses to construct* the shm backend there
+at runtime (clear error pointing at ``transport="tcp"``) instead of letting
+the FrameDecoder's short-frame errors and the FIFO asserts flag the
+corruption after the fact.
 """
 from __future__ import annotations
 
 import os
 import pickle
+import platform
 import queue
 import socket
 import struct
@@ -52,6 +58,24 @@ EOF_LEN = 0xFFFFFFFF          # length-prefix value signalling end-of-stream
 MAX_FRAME = EOF_LEN - 1
 
 EOF = object()                # yielded by FrameDecoder when the peer closed
+
+# ISAs whose memory model breaks the shm ring's lock-free cursor protocol
+_WEAKLY_ORDERED = ("aarch64", "arm64")
+
+
+def require_tso(what: str = "the shared-memory ring transport") -> None:
+    """Refuse to run the shm rings on a weakly-ordered ISA.
+
+    The SPSC cursor protocol relies on x86 total store ordering (module
+    docstring); on aarch64/arm64 the missing barriers corrupt frames
+    silently, so fail loudly at construction instead."""
+    machine = platform.machine().lower()
+    if machine in _WEAKLY_ORDERED:
+        raise RuntimeError(
+            f"{what} assumes x86 total store ordering, but this host is "
+            f"{machine!r} (weakly ordered): the lock-free ring cursors "
+            'would need memory barriers Python cannot express. '
+            'Use transport="tcp" (loopback sockets) instead.')
 
 
 def encode_frame(msgs: list) -> bytes:
@@ -483,6 +507,7 @@ class ShmTransport:
     """Pre-forked shared-memory edges; children inherit the mappings."""
 
     def __init__(self, n_proc: int, n_shards: int, capacity: int = 1 << 20):
+        require_tso()
         self.edges: Dict[Tuple[int, int], ShmEdge] = {
             (p, s): ShmEdge(capacity)
             for p in range(n_proc) for s in range(n_shards)}

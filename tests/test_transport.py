@@ -201,6 +201,101 @@ def test_fifo_assert_detects_gap_reorder_replay():
     assert fifo3.check("a", 0) is not None            # reorder
 
 
+def test_frame_roundtrip_serving_and_ackbatch_msgs():
+    """The serving-tier publish messages and the batched ack round-trip the
+    codec, numpy buffers (uids, vcs, dense state blocks) intact."""
+    rng = np.random.default_rng(7)
+    rows = np.arange(0, 12, 2)
+    delta = rng.normal(size=(6, 3))
+    state = {"k": {"rows": rows.copy(), "values": delta.copy()},
+             "k2": {"rows": np.arange(4), "values": rng.normal(size=(4, 1))}}
+    vc = np.array([3, -1, 7], dtype=np.int64)
+    msgs = [
+        M.AckBatchMsg(np.arange(17, dtype=np.int64), 1),
+        M.ReplicaDeltaMsg(0, "k", rows, delta),
+        M.ReplicaVcMsg(1, vc),
+        M.ReplicaStateMsg(0, state, vc),
+        M.ReplicaFinMsg(1),
+    ]
+    got = T.FrameDecoder().feed(T.encode_frame(msgs))
+    assert [type(m) for m in got] == [type(m) for m in msgs]
+    np.testing.assert_array_equal(got[0].uids, msgs[0].uids)
+    assert got[0].process == 1
+    np.testing.assert_array_equal(got[1].delta, delta)
+    np.testing.assert_array_equal(got[2].clock_vc, vc)
+    for key in state:
+        np.testing.assert_array_equal(got[3].state[key]["rows"],
+                                      state[key]["rows"])
+        np.testing.assert_array_equal(got[3].state[key]["values"],
+                                      state[key]["values"])
+    assert got[4].shard == 1
+
+
+def test_vap_acks_coalesce_into_batched_frames():
+    """Satellite of the serving PR: per-row acks coalesce into one
+    AckBatchMsg per (client, shard, flush) — the ack *message* count stays
+    well below the acked-update count (clock-only policies skip acks
+    entirely, so the cycle only exists under a value bound)."""
+    from repro.core import policies
+    from repro.runtime import PSRuntime
+
+    x0 = {f"k{i}": np.zeros(4) for i in range(6)}
+
+    def fn(w, clock, view, rng):
+        return {k: rng.normal(size=4) for k in x0}
+
+    rt = PSRuntime(2, policies.vap(1e6), x0, n_shards=2,
+                   threads_per_process=1, seed=0)
+    st = rt.run(fn, 30, timeout=60)
+    assert st.violations == []
+    # every delivered part is acked exactly once...
+    assert st.n_acked_updates > 0
+    # ...but the acks ride far fewer messages than updates they cover
+    assert st.n_ack_msgs <= st.n_acked_updates // 2, (
+        st.n_ack_msgs, st.n_acked_updates)
+
+
+def test_clock_only_policies_send_no_acks():
+    from repro.core import policies
+    from repro.runtime import PSRuntime
+
+    rt = PSRuntime(2, policies.ssp(2), {"a": np.zeros((4, 2))}, n_shards=2)
+    st = rt.run(lambda w, c, v, r: {"a": np.ones((4, 2))}, 10, timeout=60)
+    assert st.violations == []
+    assert st.n_ack_msgs == 0 and st.n_acked_updates == 0
+
+
+# ---------------------------------------------------------------------------
+# x86-TSO assumption of the shm rings: runtime-checked, not just documented
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("machine", ["aarch64", "ARM64"])
+def test_shm_transport_refuses_weakly_ordered_isa(monkeypatch, machine):
+    """The shm ring cursors assume x86 total store ordering; on arm the
+    transport must refuse loudly with a pointer at tcp, not corrupt."""
+    import platform
+
+    monkeypatch.setattr(platform, "machine", lambda: machine)
+    with pytest.raises(RuntimeError, match=r'transport="tcp"'):
+        T.ShmTransport(1, 1)
+    with pytest.raises(RuntimeError, match="total store ordering"):
+        T.require_tso()
+
+
+def test_serving_shm_refuses_weakly_ordered_isa(monkeypatch):
+    import platform
+
+    from repro.core import policies
+    from repro.runtime import PSRuntime
+    from repro.runtime.serving import ReplicaSet
+
+    rt = PSRuntime(1, policies.ssp(1), {"a": np.zeros(4)}, n_shards=1)
+    monkeypatch.setattr(platform, "machine", lambda: "aarch64")
+    with pytest.raises(RuntimeError, match=r'transport="tcp"'):
+        ReplicaSet(rt, 1, transport="shm")
+
+
 def test_runtime_flags_tampered_seq():
     """End-to-end: a frame whose seqs were tampered with on the wire is
     detected by the receiving shard's FIFO assertion."""
