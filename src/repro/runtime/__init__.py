@@ -12,9 +12,13 @@ client processes over loopback sockets / shared-memory rings
 with snapshot/restore of the master shard state in
 :mod:`repro.runtime.snapshot`.
 """
+from repro.runtime.membership import (INF_CLOCK, MembershipEvent,
+                                      MembershipManager, MembershipPlan,
+                                      Partition)
 from repro.runtime.messages import (AckBatchMsg, AckMsg, Channel, ClockMarker,
-                                    ClockMsg, DeliverMsg, FullyDelivered,
-                                    ProcDoneMsg, ReplicaDeltaMsg,
+                                    ClockMsg, DeliverMsg, EpochAckMsg,
+                                    EpochBeginMsg, EpochMsg, FullyDelivered,
+                                    InstallMsg, ProcDoneMsg, ReplicaDeltaMsg,
                                     ReplicaFinMsg, ReplicaStateMsg,
                                     ReplicaVcMsg, ShardFinMsg, SubscribeMsg,
                                     UnsubscribeMsg, UpdateMsg)
@@ -25,18 +29,21 @@ from repro.runtime.serving import (FRESH, ReadGateway, ReadResult, Replica,
 from repro.runtime.shard import ServerShard
 from repro.runtime.snapshot import (conservative_vc, load_snapshot,
                                     save_snapshot, snapshot_params,
-                                    take_snapshot)
+                                    take_snapshot, validate_vcs)
 from repro.runtime.transport import (FifoAssert, FrameDecoder, ShmRing,
                                      WireChannel, encode_frame, require_tso)
 
 __all__ = [
     "AckBatchMsg", "AckMsg", "Channel", "ClientProcess", "ClockMarker",
-    "ClockMsg", "DeliverMsg", "FRESH", "FifoAssert", "FrameDecoder",
-    "FullyDelivered", "PSRuntime", "ProcDoneMsg", "ReadGateway",
-    "ReadResult", "Replica", "ReplicaDeltaMsg", "ReplicaFinMsg",
-    "ReplicaSet", "ReplicaStateMsg", "ReplicaVcMsg", "RuntimeViewHandle",
+    "ClockMsg", "DeliverMsg", "EpochAckMsg", "EpochBeginMsg", "EpochMsg",
+    "FRESH", "FifoAssert", "FrameDecoder", "FullyDelivered", "INF_CLOCK",
+    "InstallMsg", "MembershipEvent", "MembershipManager", "MembershipPlan",
+    "PSRuntime", "Partition", "ProcDoneMsg", "ReadGateway", "ReadResult",
+    "Replica", "ReplicaDeltaMsg", "ReplicaFinMsg", "ReplicaSet",
+    "ReplicaStateMsg", "ReplicaVcMsg", "RuntimeViewHandle",
     "SERVING_TRANSPORTS", "ServerShard", "ShardFinMsg", "ShmRing",
     "SubscribeMsg", "TRANSPORTS", "UnsubscribeMsg", "UpdateMsg",
     "WireChannel", "conservative_vc", "encode_frame", "load_snapshot",
     "require_tso", "save_snapshot", "snapshot_params", "take_snapshot",
+    "validate_vcs",
 ]

@@ -19,6 +19,17 @@ Message flow (client process p, server shard s):
                          every peer acked an update part — the origin
                          worker's unsynchronized accumulator may shrink
 
+Elastic membership (epoch protocol, :mod:`repro.runtime.membership`):
+
+    mgr -> p : EpochMsg     announce a new epoch (rides an active shard's
+                            FIFO channel); the client swaps its router
+    p -> s   : EpochAckMsg  barrier: FIFO-after the client's last old-epoch
+                            Update/Clock on this channel
+    mgr -> s : EpochBeginMsg / InstallMsg
+                            in-parent control (shards never leave the
+                            parent): pending partition / re-partitioned
+                            dense blocks + conservative vc seed
+
 Serving tier (read replica r, see :mod:`repro.runtime.serving`):
 
     r -> s : SubscribeMsg / UnsubscribeMsg
@@ -61,6 +72,7 @@ class UpdateMsg:
     key: str
     rows: np.ndarray         # row ids of the (R, C) key matrix in this part
     delta: np.ndarray        # (len(rows), C) row deltas
+    epoch: int = 0           # membership epoch the sender routed under
     seq: int = -1
 
     @property
@@ -72,6 +84,7 @@ class UpdateMsg:
 class ClockMsg:
     process: int
     clock: int               # period just completed by `process`
+    epoch: int = 0           # membership epoch at send time
     seq: int = -1
 
 
@@ -113,7 +126,8 @@ class ClockMarker:
     process: int             # origin process whose period completed
     shard: int
     clock: int
-    seq: int = -1
+    epoch: int = 0           # sender shard's epoch at send (stale-marker
+    seq: int = -1            # filter across slot re-activations)
 
 
 @dataclass
@@ -202,13 +216,64 @@ class ReplicaFinMsg:
     seq: int = -1
 
 
+# ---------------------------------------------------------------------------
+# elastic membership (epoch protocol, repro.runtime.membership)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EpochMsg:
+    """Membership announce, manager -> every client (rides a designated
+    active shard's FIFO channel; ``shard`` names it for the FIFO assert).
+    The client swaps its key->shard router to ``(epoch, active)`` atomically
+    w.r.t. its own sends, then acks on every involved channel."""
+    epoch: int
+    active: tuple            # active slot ids of the new epoch
+    shard: int               # channel owner (the announce rides its FIFO)
+    seq: int = -1
+
+
+@dataclass
+class EpochAckMsg:
+    """Client -> shard epoch barrier: FIFO-after the client's last
+    old-epoch Update/Clock on this channel.  A shard holding acks from
+    every process will never see another old-epoch update."""
+    process: int
+    epoch: int
+    seq: int = -1
+
+
+@dataclass
+class EpochBeginMsg:
+    """Manager -> shard (in-parent only, never pickled): the pending epoch's
+    partition.  Enqueued before the client announce, so it always precedes
+    the first ack in the shard's inbox."""
+    epoch: int
+    part: object             # membership.Partition
+    seq: int = -1
+
+
+@dataclass
+class InstallMsg:
+    """Manager -> shard (in-parent only): adopt the new partition.
+    ``blocks`` is the slot's re-partitioned dense state ({key: (n, C)}), or
+    None for a retiring slot; ``seed_vc`` is the conservative applied-vc
+    seed (element-wise min over the handoff contributors)."""
+    epoch: int
+    part: object             # membership.Partition
+    blocks: object           # Optional[Dict[str, np.ndarray]]
+    seed_vc: np.ndarray
+    seq: int = -1
+
+
 @dataclass
 class ProcDoneMsg:
     """Client process finished all its clocks: no more Update/Clock msgs
     (acks for in-flight deliveries may still follow).  Multi-process quiesce,
     leg 1: every shard counts these."""
     process: int
-    seq: int = -1
+    epoch: int = 0           # client's epoch at send (held + replayed like
+    seq: int = -1            # updates if it races a pending install)
 
 
 @dataclass

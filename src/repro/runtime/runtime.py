@@ -37,6 +37,17 @@ delivery state has drained, and each child then ships its final cache,
 stats, and update totals to the parent over a pipe, where they are merged
 and checked exactly like the threaded run.
 
+**Elastic shard membership** (:mod:`repro.runtime.membership`): ``n_slots``
+shard slots are provisioned up front (threads + channels under every
+transport) with ``n_shards`` active in epoch 0; ``add_shard()`` /
+``remove_shard()`` (or a scriptable ``MembershipPlan``) re-partition
+**live** — an epoch barrier rides the existing FIFO channels, rows migrate
+parent-side through the vc-stamped snapshot re-partition path, and the
+clock/value bounds hold for accesses issued *during* the migration
+(``tests/test_membership.py`` + the ``tests/chaos.py`` fault-injection
+harness assert exactly that, plus a per-process zero-lost/zero-duplicated
+update counter audit).
+
 The simulator stays the executable specification: given the same
 ``update_fn`` both produce the same set of updates, so the quiesced runtime
 state must equal the simulator's final state element-wise (updates are
@@ -68,10 +79,13 @@ from repro.core import controller
 from repro.core.policies import Policy
 from repro.core.server import RunStats, UpdateMap
 from repro.runtime import transport as T
+from repro.runtime.membership import (INF_CLOCK, MembershipManager,
+                                      MembershipPlan, Partition)
 from repro.runtime.messages import (SHUTDOWN, AckBatchMsg, Channel,
                                     ClockMarker, ClockMsg, DeliverMsg,
-                                    FullyDelivered, ProcDoneMsg, ShardFinMsg,
-                                    UpdateMsg, group_by_channel, pump_inbox)
+                                    EpochAckMsg, EpochMsg, FullyDelivered,
+                                    ProcDoneMsg, ShardFinMsg, UpdateMsg,
+                                    group_by_channel, pump_inbox)
 from repro.runtime.shard import ServerShard
 
 TRANSPORTS = ("queue", "tcp", "shm", "proc")
@@ -107,8 +121,23 @@ class ClientProcess:
             for w in self.workers}
         self.thread_clock: Dict[int, int] = {w: 0 for w in self.workers}
         self.sent_clock = 0                   # completed periods announced
-        # marks[p, s]: highest period of process p fully forwarded by shard s
-        self.marks = np.full((rt.n_proc, rt.n_shards), -1, dtype=np.int64)
+        # elastic membership: this process's routing epoch.  route_lock
+        # excludes worker flushes during the barrier swap, making the
+        # EpochAck that follows FIFO-after every old-epoch frame.
+        self.part: Partition = rt.partition
+        self.route_lock = threading.Lock()
+        self._pending_epoch: Optional[EpochMsg] = None
+        # marks[p, s]: highest period of process p fully forwarded by shard
+        # slot s.  Inactive slots sit at INF (they constrain nothing); a
+        # slot (re)activated at epoch e resets to -1 until its seeded
+        # markers land; a retiring slot is lifted to INF by the marker it
+        # sends FIFO-behind its last delivery.
+        self.marks = np.full((rt.n_proc, rt.n_slots), INF_CLOCK,
+                             dtype=np.int64)
+        self.marks[:, list(self.part.active)] = -1
+        # epoch at which each slot was last activated: stale markers from a
+        # slot's previous activation are filtered by this
+        self.act_epoch = np.zeros(rt.n_slots, dtype=np.int64)
         self.staged: List[DeliverMsg] = []    # barrier_reads holding pen
         self.inbox: queue.Queue = queue.Queue()
         self._fifo = T.FifoAssert()           # per sender shard
@@ -146,6 +175,12 @@ class ClientProcess:
                 except BaseException as e:
                     rt._record_error(e)
             self.cond.notify_all()
+        # the epoch swap runs outside self.cond (it takes route_lock, and
+        # cond must never be held while waiting on it) but still on the
+        # comm thread, so it can never deadlock against a gated worker
+        pend, self._pending_epoch = self._pending_epoch, None
+        if pend is not None:
+            self._adopt_epoch(pend)
         # acks leave after the lock is dropped, coalesced into ONE AckBatch
         # message per (client, shard, flush) — the uids travel as a single
         # int64 buffer instead of one AckMsg per delivered part
@@ -178,9 +213,14 @@ class ClientProcess:
                         (rt._chan_ps[self.pid][msg.shard], msg.uid))
         elif isinstance(msg, ClockMarker):
             # max(): the frontier may never regress (channel FIFO already
-            # orders markers per (proc, shard); this makes it local)
-            self.marks[msg.process, msg.shard] = max(
-                self.marks[msg.process, msg.shard], msg.clock)
+            # orders markers per (proc, shard); this makes it local).  A
+            # marker stamped before the slot's latest activation is stale —
+            # it predates the re-partition and must not lift the reset mark.
+            if msg.epoch >= self.act_epoch[msg.shard]:
+                self.marks[msg.process, msg.shard] = max(
+                    self.marks[msg.process, msg.shard], msg.clock)
+        elif isinstance(msg, EpochMsg):
+            self._pending_epoch = msg         # adopted after this batch
         elif isinstance(msg, FullyDelivered):
             acc = self.unsynced[msg.worker][msg.key]
             res = acc[msg.rows] - msg.delta
@@ -212,6 +252,33 @@ class ClientProcess:
                 keep.append(msg)
         self.staged = keep
         return _ack_batches(acks, self.pid)
+
+    # ------------------------------------------------------------ membership
+    def _adopt_epoch(self, msg: EpochMsg) -> None:
+        """Swap the key->shard router at the epoch barrier.
+
+        Runs on the comm thread, outside ``self.cond``.  ``route_lock``
+        excludes in-flight worker flushes, so after the swap no old-epoch
+        frame can be emitted — which makes the EpochAckMsg sent below a
+        true barrier on every channel (FIFO-after the last old-epoch
+        Update/Clock).  New-epoch frames may precede the ack; receivers
+        hold them by their epoch stamp, not by ack order.
+        """
+        rt = self.rt
+        with self.route_lock:
+            old = self.part
+            if msg.epoch <= old.epoch:
+                return                        # duplicate announce
+            new_part = Partition(msg.epoch, msg.active, rt._row_counts)
+            with self.cond:
+                for sid in new_part.active:
+                    if not old.owns(sid):     # (re)activated slot: it now
+                        self.marks[:, sid] = -1   # constrains the frontier
+                        self.act_epoch[sid] = msg.epoch
+            self.part = new_part
+        for sid in sorted(set(old.active) | set(new_part.active)):
+            rt._send(rt._chan_ps[self.pid][sid],
+                     EpochAckMsg(self.pid, msg.epoch))
 
 
 class RuntimeViewHandle:
@@ -256,25 +323,59 @@ class _WorkerFlowMixin:
                          for k, d in upd.items()]
                 if self.prioritize:
                     items.sort(key=lambda kv: -float(np.max(np.abs(kv[1]))))
-                outbox: List[Tuple[Channel, UpdateMsg]] = []
+                outbox: List[Tuple[str, np.ndarray]] = []
                 for key, delta in items:
-                    sends = self._apply_update(w, clock, proc, key, delta)
-                    outbox.extend(sends)
+                    d2 = self._apply_update(w, clock, proc, key, delta)
+                    outbox.append((key, d2))
                 if not self.policy.push_at_clock_only:
                     # async policies push without waiting for Clock(): one
                     # coalesced multi-row frame per shard channel per period
                     # (PR 1 pushed per Inc; the update *set* and all bounds
                     # are unchanged, only send timing within a period)
-                    self._flush_outbox(outbox)
+                    self._flush_outbox(w, clock, proc, outbox)
                     outbox = []
-                self._on_clock(w, proc, outbox)
+                self._on_clock(w, clock, proc, outbox)
         except BaseException as e:
             self._record_error(e)
 
-    def _flush_outbox(self, outbox: List[Tuple[Channel, UpdateMsg]]) -> None:
-        """Send grouped per channel: one frame per channel, FIFO preserved."""
-        for chan, msgs in group_by_channel(outbox):
-            self._send_many(chan, msgs)
+    def _flush_outbox(self, w: int, clock: int, proc: ClientProcess,
+                      outbox: List[Tuple[str, np.ndarray]]) -> None:
+        """Split each update by the process's *current* partition and send,
+        one frame per shard channel, FIFO preserved.
+
+        Routing is deferred from Inc time to flush time on purpose: an SSP
+        outbox filled under epoch e but flushed after the comm thread's
+        barrier swap must route by e+1, or the old owner would receive an
+        update after its EpochAck cut and lose it in the handoff.  The
+        route_lock critical section is pure split+enqueue — it never waits
+        on a consistency gate, so the swap can always get in promptly.
+        """
+        if not outbox:
+            return
+        n_parts = 0
+        with proc.route_lock:
+            part = proc.part
+            pairs: List[Tuple[Channel, UpdateMsg]] = []
+            for key, d2 in outbox:
+                for sid in part.active:
+                    rows = part.rows_of(key, sid)
+                    if rows.size == 0:
+                        continue
+                    sub = d2[rows]
+                    nz = np.any(sub != 0.0, axis=1)
+                    if not nz.all():                 # elide all-zero rows
+                        rows, sub = rows[nz], sub[nz]
+                        if rows.size == 0:
+                            continue
+                    msg = UpdateMsg(self._next_uid(), w, proc.pid, clock,
+                                    key, rows, sub, part.epoch)
+                    pairs.append((self._chan_ps[proc.pid][sid], msg))
+                    n_parts += 1
+            for chan, msgs in group_by_channel(pairs):
+                self._send_many(chan, msgs)
+        if n_parts:
+            with self._slock:
+                self._parts_sent[proc.pid] += n_parts
 
     def _clock_gate(self, w: int, clock: int, proc: ClientProcess) -> None:
         """Block until the delivery frontier admits this period (clock bound)."""
@@ -304,9 +405,9 @@ class _WorkerFlowMixin:
                 self.stats.block_time_clock += time.monotonic() - t0
 
     def _apply_update(self, w: int, clock: int, proc: ClientProcess,
-                      key: str, delta: np.ndarray
-                      ) -> List[Tuple[Channel, UpdateMsg]]:
-        """Value-gate, apply to the process cache, split into shard parts."""
+                      key: str, delta: np.ndarray) -> np.ndarray:
+        """Value-gate and apply to the process cache; returns the canonical
+        (R, C) delta for the flush-time shard split."""
         d2 = (delta.reshape(delta.shape[0], -1) if delta.ndim > 1
               else delta.reshape(-1, 1))
         t0 = time.monotonic()
@@ -339,32 +440,18 @@ class _WorkerFlowMixin:
                     if mx > bound + 1e-9:
                         self.stats.violations.append(
                             f"VAP violation: worker {w} unsynced {mx} > {bound}")
-        sends = []
-        for s in range(self.n_shards):
-            rows = self._shard_rows[key][s]
-            if rows.size == 0:
-                continue
-            part = d2[rows]
-            nz = np.any(part != 0.0, axis=1)
-            if not nz.all():                            # elide all-zero rows
-                rows, part = rows[nz], part[nz]
-                if rows.size == 0:
-                    continue
-            msg = UpdateMsg(self._next_uid(), w, proc.pid, clock, key,
-                            np.ascontiguousarray(rows), part.copy())
-            sends.append((self._chan_ps[proc.pid][s], msg))
-        return sends
+        return d2
 
-    def _on_clock(self, w: int, proc: ClientProcess,
-                  outbox: List[Tuple[Channel, UpdateMsg]]) -> None:
+    def _on_clock(self, w: int, clock: int, proc: ClientProcess,
+                  outbox: List[Tuple[str, np.ndarray]]) -> None:
         """Clock(): flush the SSP outbox, tick, maybe advance the process."""
         # held updates must hit the channels *before* the tick (matching the
         # sim): a sibling worker's tick may advance the process clock, and
         # its ClockMsg for this period must be FIFO-after these updates —
         # the shard's marker echo relies on exactly that channel order
-        self._flush_outbox(outbox)
+        self._flush_outbox(w, clock, proc, outbox)
         advanced: List[int] = []
-        staged_acks: List[Tuple[Channel, AckMsg]] = []
+        staged_acks: List[Tuple[Channel, AckBatchMsg]] = []
         with proc.cond:
             proc.thread_clock[w] += 1
             new_min = proc.cur_period()     # process clock = min of threads
@@ -374,10 +461,19 @@ class _WorkerFlowMixin:
             if advanced and self.barrier_reads:
                 staged_acks = proc.release_staged(new_min)
             proc.cond.notify_all()
-        pairs = [(self._chan_ps[proc.pid][s], ClockMsg(proc.pid, c))
-                 for c in advanced for s in range(self.n_shards)]
-        for chan, msgs in group_by_channel(pairs):
-            self._send_many(chan, msgs)
+        if advanced:
+            # ClockMsg routes by the current partition too; if the epoch
+            # swapped between the update flush above and here, the old
+            # owner's missing clock only *under*-states its applied vc
+            # (conservative), and the new owner holds the early clock by
+            # its epoch stamp until install
+            with proc.route_lock:
+                part = proc.part
+                pairs = [(self._chan_ps[proc.pid][sid],
+                          ClockMsg(proc.pid, c, part.epoch))
+                         for c in advanced for sid in part.active]
+                for chan, msgs in group_by_channel(pairs):
+                    self._send_many(chan, msgs)
         for chan, msg in staged_acks:
             self._send(chan, msg)
         if advanced:
@@ -409,11 +505,15 @@ class PSRuntime(_WorkerFlowMixin):
                  transport: str = "queue",
                  restore_from: Optional[dict] = None,
                  snapshot_every: int = 0,
-                 snapshot_dir: Optional[str] = None):
+                 snapshot_dir: Optional[str] = None,
+                 max_shards: Optional[int] = None,
+                 membership_plan: Optional[MembershipPlan] = None):
         if n_workers % threads_per_process:
             raise ValueError("n_workers must divide into processes evenly")
         if n_shards < 1:
             raise ValueError("need at least one server shard")
+        if max_shards is not None and max_shards < n_shards:
+            raise ValueError("max_shards must be >= n_shards")
         if barrier_reads and threads_per_process != 1:
             raise ValueError("barrier_reads requires threads_per_process == 1")
         if transport not in TRANSPORTS:
@@ -426,7 +526,12 @@ class PSRuntime(_WorkerFlowMixin):
         self.P = n_workers
         self.tpp = threads_per_process
         self.n_proc = n_workers // threads_per_process
-        self.n_shards = n_shards
+        self.n_shards = n_shards              # initial active count
+        # elastic membership: n_slots shard slots are provisioned (threads +
+        # channels for every transport, so forked clients inherit the wires)
+        # but only n_shards are active in epoch 0; add_shard()/remove_shard()
+        # re-partition live (repro.runtime.membership)
+        self.n_slots = n_shards if max_shards is None else int(max_shards)
         self.policy = policy
         self.seed = seed
         self.prioritize = prioritize_by_magnitude
@@ -436,19 +541,26 @@ class PSRuntime(_WorkerFlowMixin):
         # canonical (R, C) float64 master shapes; original shapes for reads
         self._shapes: Dict[str, Tuple[int, ...]] = {}
         self._x0: Dict[str, np.ndarray] = {}
-        self._shard_rows: Dict[str, List[np.ndarray]] = {}
+        self._row_counts: Dict[str, int] = {}
         for key, v in init_params.items():
             a = np.asarray(v, dtype=np.float64)
             self._shapes[key] = a.shape
             flat = a.reshape(a.shape[0], -1) if a.ndim > 1 else a.reshape(-1, 1)
             self._x0[key] = flat.copy()
-            rows = np.arange(flat.shape[0])
-            self._shard_rows[key] = [rows[rows % n_shards == s]
-                                     for s in range(n_shards)]
+            self._row_counts[key] = flat.shape[0]
+        self.partition = Partition(0, tuple(range(n_shards)),
+                                   self._row_counts)
+        # upper bound on one shard's in-stream bootstrap frame (publish
+        # backpressure: gate resync attempts on sink room)
+        self._state_frame_bytes = sum(
+            v.nbytes + 8 * v.shape[0] for v in self._x0.values()) + 4096
 
         self.stats = RunStats()
         self._slock = threading.Lock()
         self._total = {k: np.zeros_like(v) for k, v in self._x0.items()}
+        # zero-lost/zero-duplicated audit: update parts sent, per process
+        # (matched against the shards' applied_parts at the final checks)
+        self._parts_sent = np.zeros(self.n_proc, dtype=np.int64)
         self._uid = itertools.count()
         self._done_clock = 0
         self._t0 = 0.0
@@ -465,7 +577,9 @@ class PSRuntime(_WorkerFlowMixin):
         self._snap_lock = threading.Lock()
         self._next_snap_clock = snapshot_every if snapshot_every else (1 << 62)
 
-        self.shards = [ServerShard(self, s) for s in range(n_shards)]
+        self.shards = [ServerShard(self, s) for s in range(self.n_slots)]
+        self.membership = MembershipManager(self)
+        self._membership_plan = membership_plan
         if restore_from is not None:
             from repro.runtime.snapshot import restore_into
             restore_into(self, restore_from)
@@ -480,13 +594,13 @@ class PSRuntime(_WorkerFlowMixin):
             self._final_caches: Dict[int, Dict[str, np.ndarray]] = {}
         else:
             self.procs = [ClientProcess(self, p) for p in range(self.n_proc)]
-            # FIFO channels: client process -> shard, shard -> client process
+            # FIFO channels: client process -> shard slot, and back
             self._chan_ps = [[Channel(f"p{p}->s{s}", self.shards[s].inbox)
-                              for s in range(n_shards)]
+                              for s in range(self.n_slots)]
                              for p in range(self.n_proc)]
             self._chan_sp = [[Channel(f"s{s}->p{p}", self.procs[p].inbox)
                               for p in range(self.n_proc)]
-                             for s in range(n_shards)]
+                             for s in range(self.n_slots)]
 
         self.update_fn: Optional[Callable] = None
         self.n_clocks = 0
@@ -553,6 +667,8 @@ class PSRuntime(_WorkerFlowMixin):
         self._t0 = time.monotonic()
         if self._proc_mode:
             self._start_proc()
+            if self._membership_plan is not None:
+                self.membership.start_plan(self._membership_plan)
             return
         for s in self.shards:
             s.thread.start()
@@ -563,12 +679,14 @@ class PSRuntime(_WorkerFlowMixin):
                          for w in range(self.P)]
         for t in self._workers:
             t.start()
+        if self._membership_plan is not None:
+            self.membership.start_plan(self._membership_plan)
 
     # ------------------------------------------------------- proc-mode start
     def _start_proc(self) -> None:
         ctx = multiprocessing.get_context("fork")
         if self.transport_kind == "tcp":
-            self._transport = T.TcpTransport(self.n_proc, self.n_shards)
+            self._transport = T.TcpTransport(self.n_proc, self.n_slots)
             self._transport.listen()
         else:
             # ring must hold the largest possible single row part (a whole
@@ -578,7 +696,7 @@ class PSRuntime(_WorkerFlowMixin):
                            for v in self._x0.values())
             cap = max(1 << 20, 8 * max_part)
             self._shm_max_frame = cap // 2
-            self._transport = T.ShmTransport(self.n_proc, self.n_shards,
+            self._transport = T.ShmTransport(self.n_proc, self.n_slots,
                                              capacity=cap)
         for pid in range(self.n_proc):
             recv, send = ctx.Pipe(duplex=False)
@@ -598,8 +716,8 @@ class PSRuntime(_WorkerFlowMixin):
             self._record_error(e)
 
         # parent side: route each client->shard stream into the shard inbox,
-        # hand each shard a write channel back to every client
-        self._chan_sp = [[None] * self.n_proc for _ in range(self.n_shards)]
+        # hand each shard slot a write channel back to every client
+        self._chan_sp = [[None] * self.n_proc for _ in range(self.n_slots)]
         if self.transport_kind == "tcp":
             conns = self._transport.accept_all(self._deadline)
             self._conns = conns
@@ -636,6 +754,9 @@ class PSRuntime(_WorkerFlowMixin):
                     self._record_error(RuntimeError(
                         f"worker {t.name} still alive at deadline"))
                     break
+        # a scripted membership op may still be installing: let it finish
+        # before draining (its messages are in-flight-counted like any other)
+        self.membership.finish_plan(self._deadline - time.monotonic())
         if not self._errors:
             with self._qcond:
                 while self._inflight > 0:
@@ -677,6 +798,7 @@ class PSRuntime(_WorkerFlowMixin):
                     child.join(timeout=5.0)
                     self._record_error(RuntimeError(
                         f"client process {child.name} killed at deadline"))
+            self.membership.finish_plan(self._deadline - time.monotonic())
             for pid, child in enumerate(self._children):
                 if pid not in finals:
                     # exitcode read after the join above, so the diagnostic
@@ -733,6 +855,7 @@ class PSRuntime(_WorkerFlowMixin):
             self.stats.violations.extend(st.violations)
             for k, v in fin["total"].items():
                 self._total[k] += v
+            self._parts_sent[pid] = fin.get("parts_sent", 0)
             self._final_caches[pid] = fin["cache"]
             clock_times.append(st.clock_times)
         if clock_times and all(clock_times):
@@ -765,6 +888,44 @@ class PSRuntime(_WorkerFlowMixin):
             return any(c.is_alive() for c in self._children)
         return any(t.is_alive() for t in self._workers)
 
+    # ------------------------------------------------------------ membership
+    @property
+    def n_active_shards(self) -> int:
+        """Shards active in the current membership epoch (``n_shards`` is
+        the epoch-0 count; slots are ``n_slots``)."""
+        return self.partition.A
+
+    @property
+    def _shard_rows(self) -> Dict[str, List[np.ndarray]]:
+        """Per-slot row ownership under the *current* partition (back-compat
+        view of the pre-elastic static attribute)."""
+        return {key: [self.partition.rows_of(key, s)
+                      for s in range(self.n_slots)]
+                for key in self._x0}
+
+    def add_shard(self, sid: Optional[int] = None,
+                  timeout: float = 30.0) -> int:
+        """Activate a dormant shard slot mid-run (live re-partition; see
+        :mod:`repro.runtime.membership`).  Returns the activated sid."""
+        return self.membership.add_shard(sid, timeout=timeout)
+
+    def remove_shard(self, sid: int, timeout: float = 30.0) -> None:
+        """Retire an active shard slot mid-run; its rows migrate to the
+        survivors through the vc-stamped snapshot re-partition path."""
+        self.membership.remove_shard(sid, timeout=timeout)
+
+    def completed_clock(self) -> int:
+        """Global applied-clock frontier: periods completed by every process
+        and applied by every active shard (cheap racy read, monotone — the
+        membership-plan driver polls this for its clock-boundary triggers)."""
+        done = None
+        for s in self.shards:
+            vc = s.vc_if_active()
+            if vc is not None:
+                lo = int(vc.min()) + 1
+                done = lo if done is None else min(done, lo)
+        return done or 0
+
     # ------------------------------------------------------------- reads
     def read(self, key: str, process: int = 0) -> np.ndarray:
         """Serving read: a Get() against a live process cache (threaded
@@ -784,11 +945,14 @@ class PSRuntime(_WorkerFlowMixin):
         """Assemble the authoritative value from the shard tables.
 
         Exact once the runtime is quiesced (after :meth:`wait`); mid-run it
-        is a live, per-shard-locked read of the master blocks.
+        is a live, per-shard-locked read of the master blocks.  Holds the
+        membership op lock so it never observes a half-installed partition
+        (a read racing a live re-partition waits out the short freeze).
         """
         out = np.zeros_like(self._x0[key])
-        for shard in self.shards:
-            shard.read_rows(key, out)
+        with self.membership.op_lock:
+            for shard in self.shards:
+                shard.read_rows(key, out)
         return out.reshape(self._shapes[key])
 
     def view(self, process: int) -> Dict[str, np.ndarray]:
@@ -822,23 +986,31 @@ class PSRuntime(_WorkerFlowMixin):
         barrier (snapshot.py module doc)."""
         if not self.snapshot_every or self._finished:
             return
-        # racy per-entry reads are fine: the frontier is monotone, so a
-        # stale read only delays the trigger to the next ClockMsg
-        done = min(int(s.clock_vc.min()) for s in self.shards) + 1
-        if done < self._next_snap_clock:
+        # never block a shard thread against an in-flight membership install
+        # (the manager waits for shard-side install confirms while holding
+        # op_lock): skip the boundary and let the next ClockMsg re-trigger
+        if not self.membership.op_lock.acquire(blocking=False):
             return
-        with self._snap_lock:
-            if done < self._next_snap_clock:   # another shard got here first
+        try:
+            # racy per-entry reads are fine: the frontier is monotone, so a
+            # stale read only delays the trigger to the next ClockMsg
+            done = self.completed_clock()
+            if done < self._next_snap_clock:
                 return
-            while self._next_snap_clock <= done:
-                self._next_snap_clock += self.snapshot_every
-            snap = self.snapshot()
-            self.snapshots.append((done, snap))
-            if self.snapshot_dir:
-                from repro.runtime.snapshot import save_snapshot
-                os.makedirs(self.snapshot_dir, exist_ok=True)
-                save_snapshot(os.path.join(self.snapshot_dir,
-                                           f"snap_c{done:06d}.npz"), snap)
+            with self._snap_lock:
+                if done < self._next_snap_clock:   # another shard was first
+                    return
+                while self._next_snap_clock <= done:
+                    self._next_snap_clock += self.snapshot_every
+                snap = self.snapshot()
+                self.snapshots.append((done, snap))
+                if self.snapshot_dir:
+                    from repro.runtime.snapshot import save_snapshot
+                    os.makedirs(self.snapshot_dir, exist_ok=True)
+                    save_snapshot(os.path.join(self.snapshot_dir,
+                                               f"snap_c{done:06d}.npz"), snap)
+        finally:
+            self.membership.op_lock.release()
 
     def latest_snapshot(self) -> Optional[dict]:
         """The most recent periodic snapshot, or None (serving-tier replica
@@ -862,6 +1034,15 @@ class PSRuntime(_WorkerFlowMixin):
             if not np.allclose(master, expected[k], atol=1e-6):
                 self._violation(
                     f"eventual-consistency violation on {k} (shard tables)")
+        # zero-lost/zero-duplicated audit across membership changes: every
+        # update part a client sent was applied by exactly one shard slot
+        applied = np.zeros(self.n_proc, dtype=np.int64)
+        for s in self.shards:
+            applied += s.applied_parts
+        if not np.array_equal(applied, self._parts_sent):
+            self._violation(
+                f"update audit: parts sent {self._parts_sent.tolist()} != "
+                f"applied {applied.tolist()} (lost or duplicated updates)")
 
 
 # ---------------------------------------------------------------------------
@@ -883,6 +1064,7 @@ class _ClientHost(_WorkerFlowMixin):
         self.barrier_reads = rt.barrier_reads
         self.prioritize = rt.prioritize
         self.n_shards = rt.n_shards
+        self.n_slots = rt.n_slots
         self.n_proc = rt.n_proc
         self.tpp = rt.tpp
         self.update_fn = rt.update_fn
@@ -890,12 +1072,14 @@ class _ClientHost(_WorkerFlowMixin):
         self._deadline = rt._deadline
         self._x0 = rt._x0
         self._shapes = rt._shapes
-        self._shard_rows = rt._shard_rows
+        self._row_counts = rt._row_counts
+        self.partition = rt.partition         # epoch at fork time (0)
         self._t0 = time.monotonic()
 
         self.stats = RunStats()
         self._slock = threading.Lock()
         self._total = {k: np.zeros_like(v) for k, v in self._x0.items()}
+        self._parts_sent = np.zeros(rt.n_proc, dtype=np.int64)
         # globally unique uids without cross-process coordination
         self._uid = itertools.count(pid, rt.n_proc)
         self._errors: List[BaseException] = []
@@ -909,7 +1093,7 @@ class _ClientHost(_WorkerFlowMixin):
         if rt.transport_kind == "tcp":
             self._conns = rt._transport.connect(pid)
             chans = []
-            for s in range(rt.n_shards):
+            for s in range(rt.n_slots):
                 conn = self._conns[s]
                 chans.append(T.WireChannel(f"p{pid}->s{s}", conn.write))
                 self._readers.append(T.start_reader(
@@ -918,7 +1102,7 @@ class _ClientHost(_WorkerFlowMixin):
         else:
             self._stop = threading.Event()
             chans = []
-            for s in range(rt.n_shards):
+            for s in range(rt.n_slots):
                 edge = rt._transport.edges[(pid, s)]
                 chans.append(T.WireChannel(
                     f"p{pid}->s{s}",
@@ -972,7 +1156,7 @@ class _ClientHost(_WorkerFlowMixin):
 
     def _on_shard_fin(self, msg: ShardFinMsg) -> None:
         self._fins.add(msg.shard)
-        if len(self._fins) == self.n_shards:
+        if len(self._fins) == self.n_slots:
             self._all_fins.set()
 
     # ---------------------------------------------------------------- run
@@ -997,8 +1181,10 @@ class _ClientHost(_WorkerFlowMixin):
             # for still-inbound deliveries continue from the comm thread).
             # A still-running (timed-out) worker forbids this promise — the
             # run is failing anyway; ship the error without the handshake.
+            with self.proc.route_lock:
+                ep = self.proc.part.epoch
             for chan in self._channels:
-                self._send(chan, ProcDoneMsg(self.pid))
+                self._send(chan, ProcDoneMsg(self.pid, ep))
             # quiesce leg 2: every shard's fin = our inbound stream is done
             if not self._all_fins.wait(
                     timeout=max(0.1, self._deadline - time.monotonic())):
@@ -1014,6 +1200,7 @@ class _ClientHost(_WorkerFlowMixin):
             "stats": self.stats,
             "total": self._total,
             "cache": self.proc.cache,
+            "parts_sent": int(self._parts_sent[self.pid]),
             "errors": [repr(e) for e in self._errors],
         }
 

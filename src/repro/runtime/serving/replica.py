@@ -78,11 +78,16 @@ class Replica:
                                  "the runtime's")
             self.values: Dict[str, np.ndarray] = {
                 k: master[k].astype(np.float64, copy=True) for k in rt._x0}
-            self.vc = SNAP.conservative_vc(seed_snapshot, rt.n_shards,
+            self.vc = SNAP.conservative_vc(seed_snapshot, rt.n_slots,
                                            rt.n_proc)
         else:
             self.values = {k: v.copy() for k, v in rt._x0.items()}
-            self.vc = np.full((rt.n_shards, rt.n_proc), -1, dtype=np.int64)
+            # per *slot* vector clock: inactive slots sit at -1 and the
+            # master frontier never claims them, so they drop out of the
+            # staleness max; a newly activated slot's master row appears at
+            # install and keeps reads conservative until the in-stream
+            # re-bootstrap lands here
+            self.vc = np.full((rt.n_slots, rt.n_proc), -1, dtype=np.int64)
         self.inbox: queue.Queue = queue.Queue()
         self.fins: set = set()              # shards that acked unsubscribe
         self.poisoned = False               # ingest failed: out of rotation
@@ -169,7 +174,8 @@ class ReplicaSet:
     """
 
     def __init__(self, rt, n_replicas: int = 2, transport: str = "queue",
-                 check: bool = True, bootstrap_from_snapshot: bool = False):
+                 check: bool = True, bootstrap_from_snapshot: bool = False,
+                 ring_capacity: Optional[int] = None):
         if transport not in SERVING_TRANSPORTS:
             raise ValueError(f"unknown serving transport {transport!r}; "
                              f"choose from {SERVING_TRANSPORTS}")
@@ -189,15 +195,24 @@ class ReplicaSet:
         self._closing = False
         self._closed = False
         self._next_rid = 0
-        # control edges into the shard inboxes (in-process by construction)
+        # control edges into the shard slot inboxes (in-process by
+        # construction; inactive slots just never publish)
         self._ctrl = [Channel(f"serve->s{s.sid}", s.inbox) for s in rt.shards]
         self._edges: Dict[Tuple[int, int], dict] = {}
-        # ring sized so a whole in-stream bootstrap state frame fits
+        self._subscribed: Dict[int, set] = {}    # rid -> sids subscribed
+        # ring sized so a whole in-stream bootstrap state frame fits; an
+        # explicit (small) capacity lets tests exercise the drop-and-resync
+        # backpressure path deterministically
         state_bytes = sum(v.nbytes + 8 * v.shape[0] + 4096
                           for v in rt._x0.values())
-        self._cap = max(1 << 20, 4 * state_bytes)
+        self._cap = (max(2 * state_bytes, int(ring_capacity))
+                     if ring_capacity else max(1 << 20, 4 * state_bytes))
         for _ in range(n_replicas):
             self.add_replica(bootstrap_from_snapshot=bootstrap_from_snapshot)
+        # elastic membership: after each completed epoch, subscribe every
+        # replica to newly activated slots (their in-stream bootstrap makes
+        # the migrated rows exact) and unsubscribe from retired ones
+        rt.membership.add_listener(self._on_epoch)
 
     # -------------------------------------------------------------- plumbing
     def _notify(self) -> None:
@@ -232,32 +247,79 @@ class ReplicaSet:
         self._next_rid += 1
         rep = Replica(self, rid, seed_snapshot=snap)
         rep.thread.start()
-        for sid, shard in enumerate(self.rt.shards):
-            chan = self._make_channel(rep, sid)
-            self.rt._send(self._ctrl[sid],
-                          SubscribeMsg(rid, chan, want_state=True))
+        self._subscribed[rid] = set()
+        # subscribe to the *active* slots of the current epoch; membership
+        # changes later adjust via the _on_epoch listener
+        with self.rt.membership.op_lock:
+            active = self.rt.partition.active
+        for sid in active:
+            self._subscribe(rep, sid)
         self.replicas.append(rep)
         return rep
 
+    def _subscribe(self, rep: Replica, sid: int) -> None:
+        edge = self._edges.get((rep.rid, sid))
+        chan = edge["chan"] if edge else self._make_channel(rep, sid)
+        rep.fins.discard(sid)               # a re-activated slot's old fin
+        self._subscribed[rep.rid].add(sid)  # must not satisfy close() early
+        self.rt._send(self._ctrl[sid], SubscribeMsg(rep.rid, chan,
+                                                    want_state=True))
+
+    def _on_epoch(self, epoch: int, part, added: List[int],
+                  removed: List[int]) -> None:
+        """Membership listener: re-wire every replica's subscriptions.
+
+        Newly activated slots bootstrap the replica in-stream (state + vc,
+        FIFO-before any delta); continuing slots already pushed their own
+        re-bootstrap at install, so only the added/removed edges change
+        here.  Channels are kept across retire/re-activate cycles so the
+        per-channel FIFO sequence stays continuous."""
+        if self._closed:
+            return
+        for rep in self.replicas:
+            for sid in added:
+                self._subscribe(rep, sid)
+            for sid in removed:
+                if sid in self._subscribed.get(rep.rid, ()):
+                    self._subscribed[rep.rid].discard(sid)
+                    self.rt._send(self._ctrl[sid], UnsubscribeMsg(rep.rid))
+
     def _make_channel(self, rep: Replica, sid: int):
-        """The shard->replica publish edge for the chosen transport."""
+        """The shard->replica publish edge for the chosen transport.
+
+        Wire-backed edges (shm/tcp) are built with a non-blocking
+        ``try_write`` sink so the shard's publish path can drop-and-resync
+        instead of stalling on a wedged replica, and with a ``pause`` event
+        the fault-injection harness uses to wedge the replica's reader
+        deliberately."""
         name = f"s{sid}->r{rep.rid}"
         if self.transport == "queue":
-            self._edges[(rep.rid, sid)] = {"kind": "queue"}
-            return Channel(name, rep.inbox)
+            chan = Channel(name, rep.inbox)
+            self._edges[(rep.rid, sid)] = {"kind": "queue", "chan": chan}
+            return chan
+        pause = threading.Event()
         if self.transport == "shm":
             ring = T.ShmRing.create(self._cap)
             bell_r, bell_w = os.pipe()
             os.set_blocking(bell_w, False)
             stop = threading.Event()
-            reader = T.start_reader(
-                f"rx-{name}", T.ring_reader(ring, bell_r, stop),
-                rep.inbox, self._record_error)
+            inner = T.ring_reader(ring, bell_r, stop)
+
+            def read_chunk(inner=inner, pause=pause, stop=stop):
+                while pause.is_set() and not stop.is_set():
+                    time.sleep(0.005)          # wedged: stop draining
+                return inner()
+
+            reader = T.start_reader(f"rx-{name}", read_chunk,
+                                    rep.inbox, self._record_error)
+            chan = T.WireChannel(name, T.ring_writer(ring, bell_w),
+                                 max_frame=self._cap // 2,
+                                 try_write=T.try_ring_writer(ring, bell_w),
+                                 room=ring.free_bytes)
             self._edges[(rep.rid, sid)] = {
                 "kind": "shm", "ring": ring, "bell": (bell_r, bell_w),
-                "stop": stop, "reader": reader}
-            return T.WireChannel(name, T.ring_writer(ring, bell_w),
-                                 max_frame=self._cap // 2)
+                "stop": stop, "reader": reader, "chan": chan, "pause": pause}
+            return chan
         # tcp: a real loopback socket per (shard, replica)
         lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         lsock.bind(("127.0.0.1", 0))
@@ -266,16 +328,68 @@ class ReplicaSet:
         r_sock, _ = lsock.accept()
         lsock.close()
         w_conn, r_conn = T.TcpConn(w_sock), T.TcpConn(r_sock)
-        reader = T.start_reader(f"rx-{name}", r_conn.read_chunk,
+        inner_tcp = r_conn.read_chunk
+
+        def read_chunk_tcp(inner=inner_tcp, pause=pause):
+            while pause.is_set():
+                time.sleep(0.005)
+            return inner()
+
+        reader = T.start_reader(f"rx-{name}", read_chunk_tcp,
                                 rep.inbox, self._record_error)
+        chan = T.WireChannel(name, w_conn.write, try_write=w_conn.try_write,
+                             room=w_conn.room)
         self._edges[(rep.rid, sid)] = {
-            "kind": "tcp", "w": w_conn, "r": r_conn, "reader": reader}
-        return T.WireChannel(name, w_conn.write)
+            "kind": "tcp", "w": w_conn, "r": r_conn, "reader": reader,
+            "chan": chan, "pause": pause}
+        return chan
+
+    # -------------------------------------------------------- fault injection
+    def wedge(self, rid: int, wedged: bool = True) -> None:
+        """Deliberately stop (or resume) draining a replica's publish edges
+        — the chaos harness's wedged-replica fault.  Only meaningful on the
+        wire transports (an in-process queue edge is unbounded and cannot
+        exert backpressure)."""
+        for (r, _sid), edge in self._edges.items():
+            if r == rid and "pause" in edge:
+                if wedged:
+                    edge["pause"].set()
+                else:
+                    edge["pause"].clear()
+
+    @property
+    def stale_replicas(self) -> set:
+        """Replica ids currently marked stale by at least one shard (their
+        next successful publish cycle re-bootstraps them in-stream)."""
+        out = set()
+        for s in self.rt.shards:
+            out |= s._stale_subs
+        return out
+
+    @property
+    def pub_drops(self) -> int:
+        """Publish cycles dropped on a full sink (wedged replicas)."""
+        return sum(s.pub_drops for s in self.rt.shards)
+
+    @property
+    def pub_resyncs(self) -> int:
+        """Successful in-stream re-bootstraps of recovered replicas."""
+        return sum(s.pub_resyncs for s in self.rt.shards)
 
     # ---------------------------------------------------------- vc plumbing
     def master_vc(self) -> np.ndarray:
-        """The live per-shard applied vector clocks, stacked (S, P)."""
-        return np.stack([s.vc_snapshot() for s in self.rt.shards])
+        """The live per-slot applied vector clocks, stacked (n_slots, P).
+
+        Each shard claims its row only while it owns rows (ownership and vc
+        read under one lock): a retired slot drops out at -1, and mid-
+        migration both the retiring and the new owner may claim — the max
+        in :meth:`staleness` makes that over-requirement, never under."""
+        out = np.full((self.rt.n_slots, self.rt.n_proc), -1, dtype=np.int64)
+        for s in self.rt.shards:
+            vc = s.vc_if_active()
+            if vc is not None:
+                out[s.sid] = vc
+        return out
 
     @staticmethod
     def staleness(replica_vc: np.ndarray, master_vc: np.ndarray) -> int:
@@ -288,16 +402,18 @@ class ReplicaSet:
         if self._closed:
             return
         self._closed = True
-        alive = [s for s in self.rt.shards if s.thread.is_alive()]
+        alive = {s.sid for s in self.rt.shards if s.thread.is_alive()}
+        needs = {rep.rid: self._subscribed.get(rep.rid, set()) & alive
+                 for rep in self.replicas}
         for rep in self.replicas:
-            for s in alive:
-                self.rt._send(self._ctrl[s.sid], UnsubscribeMsg(rep.rid))
+            for sid in sorted(needs[rep.rid]):
+                self.rt._send(self._ctrl[sid], UnsubscribeMsg(rep.rid))
         # fins are published FIFO-last: once they land, nothing further
         # will ever be written on the publish channels
-        need = {s.sid for s in alive}
         deadline = time.monotonic() + timeout
         with self.cond:
-            while (any(not need <= rep.fins for rep in self.replicas)
+            while (any(not needs[rep.rid] <= rep.fins
+                       for rep in self.replicas)
                    and time.monotonic() < deadline):
                 self.cond.wait(0.25)
         self._closing = True
@@ -306,6 +422,8 @@ class ReplicaSet:
         for rep in self.replicas:
             rep.thread.join(timeout=5.0)
         for (rid, sid), edge in self._edges.items():
+            if "pause" in edge:
+                edge["pause"].clear()       # unwedge so readers can exit
             if edge["kind"] == "shm":
                 edge["stop"].set()
                 T.ShmEdge.ring_bell(edge["bell"][1])

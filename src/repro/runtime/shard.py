@@ -1,14 +1,15 @@
 """Server shard of the PS runtime (paper §4.1).
 
-Each shard is one thread owning a hash partition of every key's rows (row
-``r`` of a key lives on shard ``r % n_shards`` — the same rule as
-``Table.server_partition``), held as one **dense contiguous numpy block per
-key** so a batch of row updates applies as a single vectorized
-``np.add.at`` over the concatenated row indices instead of a Python loop of
-``Table.inc`` calls (numpy releases the GIL inside the fancy-index kernels,
-which is what lets shard threads keep up with multiple worker processes).
-``state()``/``load_state()`` (:mod:`repro.runtime.snapshot`) and
-``read_rows()`` (live locked master reads) are the row-state interfaces.
+Each shard is one thread owning a partition of every key's rows under the
+current membership epoch (row ``r`` of a key lives on
+``active[r % len(active)]`` — :class:`repro.runtime.membership.Partition`),
+held as one **dense contiguous numpy block per key** so a batch of row
+updates applies as a single vectorized ``np.add.at`` over the concatenated
+row indices instead of a Python loop of ``Table.inc`` calls (numpy releases
+the GIL inside the fancy-index kernels, which is what lets shard threads
+keep up with multiple worker processes).  ``state()``/``load_state()``
+(:mod:`repro.runtime.snapshot`) and ``read_rows()`` (live locked master
+reads) are the row-state interfaces.
 
 The shard applies incoming update parts to the master block, then
 propagates them to every peer process cache, echoes client clock messages
@@ -23,13 +24,27 @@ updates queue FIFO per key and are released as acks free half-sync budget,
 mirroring ``server.py`` ``_try_start_delivery`` / ``_on_deliver``.  As in
 the simulator, a queued update is *not* counted against the clock frontier
 — the marker echo is immediate — so the two bounds compose identically in
-both implementations.
+both implementations.  The half-sync/pending accounting is key-global (not
+partition-local), so it survives membership change untouched.
+
+Elastic membership (:mod:`repro.runtime.membership`): the shard is a *slot*
+— it may be inactive (owning no rows), active, retired, or re-activated as
+epochs change.  Between a pending epoch's announce and its install, any
+message stamped with the next epoch is **held** FIFO and replayed through
+the normal apply/publish path at install; a shard active in the old epoch
+*cuts* once every client process acked (channel FIFO then guarantees no
+more old-epoch updates), handing its frozen ``state()`` + applied vector
+clock to the manager.  A retiring slot broadcasts ``clock=INF`` markers —
+FIFO-behind everything it ever delivered — so it stops constraining the
+clock frontier exactly when its stream completes; a (re)activated slot
+broadcasts *seeded* markers from its post-replay vector clock so client
+frontiers unblock without waiting a period.
 
 Multi-process quiesce: when the runtime runs with a real transport, each
 client sends :class:`ProcDoneMsg` after its last clock; once every process
-is done and ``pending``/``queued`` have drained, the shard broadcasts
-:class:`ShardFinMsg` (FIFO-after everything else it will ever send), which
-is the client's signal that its inbound stream is complete.
+is done and ``pending``/``queued``/held messages have drained, the shard
+broadcasts :class:`ShardFinMsg` (FIFO-after everything else it will ever
+send), which is the client's signal that its inbound stream is complete.
 
 Serving tier (:mod:`repro.runtime.serving`): the shard additionally keeps
 ``clock_vc`` — its **applied vector clock** over client processes
@@ -41,6 +56,13 @@ FIFO on the per-replica publish channel.  A replica subscribing mid-run is
 bootstrapped **in-stream**: the shard answers with its current dense
 partition (snapshot payload format) plus vc stamp before any further delta,
 so the replica's view is exact from the first frame it applies.
+
+Publish backpressure: replica publish sends are **non-blocking** where the
+wire allows (``WireChannel.try_send_many``) — a wedged replica whose ring
+filled up is marked *stale* and its frames are dropped instead of stalling
+the shard's apply loop; every subsequent publish cycle retries a full
+in-stream re-bootstrap (state + vc, the exact same path as a fresh
+subscribe) and the replica resumes exact once its ring drains.
 """
 from __future__ import annotations
 
@@ -52,9 +74,11 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import controller
+from repro.runtime.membership import INF_CLOCK
 from repro.runtime.messages import (SHUTDOWN, AckBatchMsg, AckMsg, Channel,
                                     ClockMarker, ClockMsg, DeliverMsg,
-                                    FullyDelivered, ProcDoneMsg, ReplicaDeltaMsg,
+                                    EpochAckMsg, EpochBeginMsg, FullyDelivered,
+                                    InstallMsg, ProcDoneMsg, ReplicaDeltaMsg,
                                     ReplicaFinMsg, ReplicaStateMsg, ReplicaVcMsg,
                                     ShardFinMsg, SubscribeMsg, UnsubscribeMsg,
                                     UpdateMsg, group_by_channel, pump_inbox)
@@ -68,13 +92,16 @@ class ServerShard:
         self.rt = rt
         self.sid = sid
         self.inbox: queue.Queue = queue.Queue()
-        self.lock = threading.Lock()      # guards .dense for live reads
-        # master state: one dense (n_owned_rows, C) block per key; the
-        # global row `r` (with r % n_shards == sid) lives at r // n_shards
+        self.lock = threading.Lock()      # guards .dense/.part/.clock_vc
+        self.part = rt.partition          # current membership epoch's map
+        self.epoch = self.part.epoch
+        # master state: one dense (n_owned_rows, C) block per key, in
+        # partition order (global row r at local index r // part.A)
         self.dense: Dict[str, np.ndarray] = {
-            key: x0[rt._shard_rows[key][sid]].copy()
+            key: x0[self.part.rows_of(key, sid)].copy()
             for key, x0 in rt._x0.items()}
         # strong-VAP: per-key magnitude of half-synchronized updates
+        # (key-global, so it is untouched by re-partitioning)
         self.halfsync: Dict[str, np.ndarray] = {
             key: np.zeros_like(x0) for key, x0 in rt._x0.items()}
         # uid -> (msg, remaining acks)
@@ -85,11 +112,24 @@ class ServerShard:
         self._done_procs: set = set()      # multi-process quiesce, leg 1
         self._fin_sent = False
         self._outbox: List[Tuple[Channel, object]] = []
+        # elastic membership: pending epoch between Begin and Install
+        self._pending_part = None          # next epoch's Partition
+        self._pending_acks: set = set()    # procs that crossed the barrier
+        self._cut_done = False
+        self._held: List[object] = []      # next-epoch msgs, FIFO per proc
+        # zero-lost/zero-duplicated audit: update parts applied, per origin
+        self.applied_parts = np.zeros(rt.n_proc, dtype=np.int64)
         # serving tier: applied per-process vector clock (guarded by .lock
         # for consistent reads from the gateway) + replica publish channels
         self.clock_vc = np.full(rt.n_proc, -1, dtype=np.int64)
         self.subscribers: Dict[int, object] = {}   # replica id -> channel
         self._pub: Dict[int, List[object]] = {}    # pending publish per replica
+        # wedged replicas (drop-and-resync).  Treated as immutable: every
+        # change REBINDS a fresh set (atomic under the GIL), so cross-thread
+        # readers (ReplicaSet.stale_replicas) can iterate a snapshot safely
+        self._stale_subs: frozenset = frozenset()
+        self.pub_drops = 0                 # publish cycles dropped on a full
+        self.pub_resyncs = 0               # sink / successful re-bootstraps
         self._vc_dirty = False
         self.thread = threading.Thread(
             target=self._loop, name=f"ps-shard-{sid}", daemon=True)
@@ -100,10 +140,13 @@ class ServerShard:
 
     def _handle_batch(self, batch: list) -> bool:
         """Coalesce runs of UpdateMsgs into one vectorized apply, dispatch
-        everything else in arrival order, flush sends per channel."""
+        everything else in arrival order, flush sends per channel.  Messages
+        stamped with a pending (not yet installed) epoch are held FIFO and
+        replayed at install."""
         rt = self.rt
         shutdown = False
         done = 0
+        held = 0
         run: List[UpdateMsg] = []
         for msg in batch:
             if msg is SHUTDOWN:
@@ -118,6 +161,10 @@ class ServerShard:
                         if err:
                             rt._violation(f"FIFO violation: proc {sender}->"
                                           f"shard {self.sid} {err}")
+                if self._should_hold(msg):
+                    self._held.append(msg)
+                    held += 1
+                    continue
                 if isinstance(msg, UpdateMsg):
                     run.append(msg)
                 else:
@@ -136,10 +183,21 @@ class ServerShard:
         self._flush_outbox()
         # in-flight decrements must come *after* the sends this batch caused
         # were enqueued (incrementing the counter), else the quiesce wait can
-        # observe a transient 0 and shut down ahead of late deliveries
-        for _ in range(done):
+        # observe a transient 0 and shut down ahead of late deliveries.
+        # Held messages stay in flight until their replay.
+        for _ in range(done - held):
             rt._msg_done()
         return shutdown
+
+    def _should_hold(self, msg) -> bool:
+        """Next-epoch traffic raced ahead of this slot's install: park it.
+
+        Only updates and clocks need the epoch hold (they touch the dense
+        layout / the marker echo); ProcDone is epoch-independent — an
+        uninvolved slot's epoch never advances, and ``_maybe_fin`` already
+        defers the fin past any pending install + replay."""
+        return (isinstance(msg, (UpdateMsg, ClockMsg))
+                and msg.epoch > self.part.epoch)
 
     # --------------------------------------------------------------- sends
     def _send(self, chan: Channel, msg) -> None:
@@ -181,7 +239,17 @@ class ServerShard:
             for q in range(rt.n_proc):
                 if q != msg.process:
                     self._send(rt._chan_sp[self.sid][q],
-                               ClockMarker(msg.process, self.sid, msg.clock))
+                               ClockMarker(msg.process, self.sid, msg.clock,
+                                           self.epoch))
+        elif isinstance(msg, EpochBeginMsg):
+            self._pending_part = msg.part
+            self._pending_acks = set()
+            self._cut_done = False
+        elif isinstance(msg, EpochAckMsg):
+            self._pending_acks.add(msg.process)
+            self._maybe_cut()
+        elif isinstance(msg, InstallMsg):
+            self._install(msg)
         elif isinstance(msg, SubscribeMsg):
             self._on_subscribe(msg)
         elif isinstance(msg, UnsubscribeMsg):
@@ -190,6 +258,91 @@ class ServerShard:
             self._done_procs.add(msg.process)
         else:
             raise TypeError(f"shard {self.sid}: unexpected message {msg!r}")
+
+    # ------------------------------------------------------ epoch protocol
+    def _maybe_cut(self) -> None:
+        """All clients crossed the barrier: freeze and hand off (module
+        docstring step 3).  Channel FIFO guarantees no further old-epoch
+        update can arrive, so the state cut is final for this epoch."""
+        rt = self.rt
+        if (self._pending_part is None or self._cut_done
+                or len(self._pending_acks) < rt.n_proc):
+            return
+        self._cut_done = True
+        if self.part.owns(self.sid):
+            # vc-stamped snapshot payload: the migration transfer format
+            rt.membership.inbox.put(
+                ("handoff", self.sid, (self.state(), self.vc_snapshot())))
+        if not self._pending_part.owns(self.sid):
+            # retiring: everything this slot will ever deliver (bar strong-
+            # VAP-queued updates, which are exempt from the clock frontier
+            # exactly like in the simulator) is FIFO-before these markers,
+            # so clients may treat the slot as infinitely caught up
+            for q in range(rt.n_proc):
+                for p in range(rt.n_proc):
+                    if p != q:
+                        self._send(rt._chan_sp[self.sid][q],
+                                   ClockMarker(p, self.sid, INF_CLOCK,
+                                               self.epoch))
+
+    def _install(self, msg: InstallMsg) -> None:
+        """Adopt the new epoch's partition and dense blocks, replay held
+        next-epoch traffic, then broadcast seeded frontier markers."""
+        rt = self.rt
+        with self.lock:
+            self.part = msg.part
+            if msg.blocks is None:              # retiring / staying inactive
+                self.dense = {key: x0[:0].copy()
+                              for key, x0 in rt._x0.items()}
+            else:
+                self.dense = dict(msg.blocks)
+                np.maximum(self.clock_vc, msg.seed_vc, out=self.clock_vc)
+        self.epoch = msg.epoch
+        self._pending_part = None
+        self._pending_acks = set()
+        self._cut_done = False
+        held, self._held = self._held, []
+        run: List[UpdateMsg] = []
+        for m in held:
+            if isinstance(m, UpdateMsg):
+                run.append(m)
+            else:
+                self._flush_updates(run)
+                run = []
+                self._handle(m)
+        self._flush_updates(run)
+        for _ in held:
+            rt._msg_done()
+        if self.part.owns(self.sid):
+            # seeded markers: deliveries for everything clock_vc covers are
+            # FIFO-before this on each s->q channel (replayed just above or
+            # published by the old owners, whose markers/INF still vouch),
+            # and install strictly follows every client's swap+ack, so the
+            # marker can never overtake the receiver's router swap
+            with self.lock:
+                vc = self.clock_vc.copy()
+            for q in range(rt.n_proc):
+                for p in range(rt.n_proc):
+                    if p != q and vc[p] >= 0:
+                        self._send(rt._chan_sp[self.sid][q],
+                                   ClockMarker(p, self.sid, int(vc[p]),
+                                               self.epoch))
+        # serving: existing subscribers lack the base values of rows that
+        # migrated INTO this slot (they only ever saw this slot's deltas) —
+        # push an in-stream re-bootstrap: a post-replay state + vc cut,
+        # FIFO-after everything already published, superseding any replay
+        # deltas still pending for them
+        if self.part.owns(self.sid) and self.subscribers:
+            for rid, chan in self.subscribers.items():
+                self._pub.pop(rid, None)
+                if rid in self._stale_subs:
+                    continue               # the resync path re-bootstraps
+                if not self._publish_send(chan, [ReplicaStateMsg(
+                        self.sid, self.state(), self.vc_snapshot())]):
+                    self._stale_subs = self._stale_subs | {rid}
+                    self.pub_drops += 1
+        self._vc_dirty = True
+        rt.membership.inbox.put(("installed", self.sid, msg.epoch))
 
     # --------------------------------------------------------------- updates
     def _flush_updates(self, run: List[UpdateMsg]) -> None:
@@ -201,24 +354,27 @@ class ServerShard:
         by_key: Dict[str, List[UpdateMsg]] = {}
         for msg in run:
             by_key.setdefault(msg.key, []).append(msg)
+            self.applied_parts[msg.process] += 1
         with self.lock:
+            A = self.part.A
             for key, msgs in by_key.items():
                 dense = self.dense[key]
                 if len(msgs) == 1:
                     m = msgs[0]
                     # rows are unique within one part: plain fancy-index add
-                    dense[m.rows // rt.n_shards] += m.delta
+                    dense[m.rows // A] += m.delta
                     rows, delta = m.rows, m.delta
                 else:
                     rows = np.concatenate([m.rows for m in msgs])
                     delta = np.concatenate([m.delta for m in msgs])
                     # rows may repeat across parts: np.add.at accumulates
-                    np.add.at(dense, rows // rt.n_shards, delta)
+                    np.add.at(dense, rows // A, delta)
                 # serving: one coalesced delta per key per cycle per replica
                 # (global row ids; the arrays are shared — receivers only read)
                 for rid in self.subscribers:
-                    self._pub.setdefault(rid, []).append(
-                        ReplicaDeltaMsg(self.sid, key, rows, delta))
+                    if rid not in self._stale_subs:
+                        self._pub.setdefault(rid, []).append(
+                            ReplicaDeltaMsg(self.sid, key, rows, delta))
         for msg in run:
             self._route_delivery(msg)
 
@@ -294,10 +450,13 @@ class ServerShard:
     # ------------------------------------------------------- proc quiesce
     def _maybe_fin(self) -> None:
         """Broadcast ShardFin once every process is done and deliveries have
-        fully drained — nothing further will ever leave this shard."""
+        fully drained — nothing further will ever leave this shard.  A
+        pending membership install (held messages still to replay) defers
+        the fin."""
         rt = self.rt
         if (self._fin_sent or len(self._done_procs) < rt.n_proc
-                or self.pending or any(self.queued.values())):
+                or self.pending or any(self.queued.values())
+                or self._pending_part is not None or self._held):
             return
         self._fin_sent = True
         for q in range(rt.n_proc):
@@ -309,43 +468,89 @@ class ServerShard:
         with self.lock:
             return self.clock_vc.copy()
 
+    def vc_if_active(self) -> Optional[np.ndarray]:
+        """The applied vc, or None while this slot owns no rows — the
+        membership-aware master frontier the serving SLO measures against
+        (ownership and vc are read under one lock, so a mid-migration
+        reader always sees at least one shard vouching for every row)."""
+        with self.lock:
+            if not self.part.owns(self.sid):
+                return None
+            return self.clock_vc.copy()
+
     def _on_subscribe(self, msg: SubscribeMsg) -> None:
         """Register a replica publish channel; bootstrap in-stream.
 
         The state payload and the vc stamp are taken in the shard thread, so
         they form an exact cut: every delta published afterwards is FIFO
-        behind them on this channel."""
+        behind them on this channel.  The bootstrap send is non-blocking
+        like every publish: a subscriber whose (reused) edge is already
+        wedged full starts out *stale* and gets its bootstrap from the
+        resync path once the sink drains — the shard never stalls."""
         chan = msg.channel
-        if msg.want_state:
-            chan.send(ReplicaStateMsg(self.sid, self.state(),
-                                      self.vc_snapshot()))
-        else:
-            chan.send(ReplicaVcMsg(self.sid, self.vc_snapshot()))
+        boot = (ReplicaStateMsg(self.sid, self.state(), self.vc_snapshot())
+                if msg.want_state
+                else ReplicaVcMsg(self.sid, self.vc_snapshot()))
         self.subscribers[msg.replica] = chan
+        if self._publish_send(chan, [boot]):
+            self._stale_subs = self._stale_subs - {msg.replica}
+        else:
+            self._stale_subs = self._stale_subs | {msg.replica}
+            self.pub_drops += 1
 
     def _on_unsubscribe(self, msg: UnsubscribeMsg) -> None:
         chan = self.subscribers.pop(msg.replica, None)
+        self._stale_subs = self._stale_subs - {msg.replica}
         if chan is None:
             return
-        # flush this replica's pending publishes FIFO-before the fin
+        # flush this replica's pending publishes FIFO-before the fin —
+        # non-blocking: a wedged replica simply misses its fin (close()'s
+        # fin wait is deadline-bounded) rather than stalling the shard
         msgs = self._pub.pop(msg.replica, [])
         msgs.append(ReplicaFinMsg(self.sid))
-        chan.send_many(msgs)
+        if not self._publish_send(chan, msgs):
+            self.pub_drops += 1
+
+    def _publish_send(self, chan, msgs: list) -> bool:
+        """Non-blocking publish where the wire supports it (see module
+        docstring, "Publish backpressure")."""
+        try_send = getattr(chan, "try_send_many", None)
+        if try_send is None:
+            chan.send_many(msgs)               # in-process queue: unbounded
+            return True
+        return try_send(msgs)
+
+    def _try_resync(self, rid: int, chan) -> None:
+        """Attempt the in-stream re-bootstrap of a stale replica: a fresh
+        state + vc cut, exactly the subscribe path.  Skipped cheaply while
+        the sink still lacks room for a state-sized frame."""
+        if chan.room() < self.rt._state_frame_bytes:
+            return
+        if self._publish_send(chan, [ReplicaStateMsg(
+                self.sid, self.state(), self.vc_snapshot())]):
+            self._stale_subs = self._stale_subs - {rid}
+            self.pub_resyncs += 1
 
     def _flush_publish(self) -> None:
         """Publish this cycle's coalesced deltas + (if the applied frontier
         moved) a vector-clock stamp to every subscribed replica.  Publish
         channels are serving-owned: sends bypass the runtime's in-flight
-        quiesce accounting on purpose."""
+        quiesce accounting on purpose, and they never block the shard — a
+        full sink marks the replica stale for drop-and-resync."""
         vc_dirty, self._vc_dirty = self._vc_dirty, False
         if self.subscribers:
             stamp = self.vc_snapshot() if vc_dirty else None
             for rid, chan in self.subscribers.items():
+                if rid in self._stale_subs:
+                    self._pub.pop(rid, None)
+                    self._try_resync(rid, chan)
+                    continue
                 msgs = self._pub.pop(rid, [])
                 if stamp is not None:
                     msgs.append(ReplicaVcMsg(self.sid, stamp))
-                if msgs:
-                    chan.send_many(msgs)
+                if msgs and not self._publish_send(chan, msgs):
+                    self._stale_subs = self._stale_subs | {rid}   # wedged:
+                    self.pub_drops += 1         # drop now, resync later
         elif self._pub:
             self._pub.clear()
         if vc_dirty:
@@ -355,14 +560,15 @@ class ServerShard:
     def read_rows(self, key: str, out: np.ndarray) -> None:
         """Scatter this shard's live rows of `key` into the full (R, C)
         buffer `out` (locked: safe against the apply loop mid-run)."""
-        rows = self.rt._shard_rows[key][self.sid]
         with self.lock:
-            out[rows] = self.dense[key]
+            rows = self.part.rows_of(key, self.sid)
+            if rows.size:
+                out[rows] = self.dense[key]
 
     def state(self) -> Dict[str, Dict[str, np.ndarray]]:
         """Snapshot payload: per key, global row ids + dense values."""
         with self.lock:
-            return {key: {"rows": self.rt._shard_rows[key][self.sid].copy(),
+            return {key: {"rows": self.part.rows_of(key, self.sid).copy(),
                           "values": self.dense[key].copy()}
                     for key in self.dense}
 
@@ -370,7 +576,7 @@ class ServerShard:
         """Adopt a snapshot taken by :meth:`state` (rejoin after a kill)."""
         with self.lock:
             for key, part in state.items():
-                mine = self.rt._shard_rows[key][self.sid]
+                mine = self.part.rows_of(key, self.sid)
                 if (part["rows"].shape != mine.shape
                         or not np.array_equal(part["rows"], mine)):
                     raise ValueError(

@@ -40,17 +40,24 @@ def take_snapshot(rt) -> dict:
     applied per-process vector clock (``clock_vcs``) and the completed-clock
     frontier those vcs imply (``clock``) — what lets a serving-tier replica
     seeded from a snapshot report an honest staleness before its in-stream
-    bootstrap arrives."""
-    vcs = [s.vc_snapshot() for s in rt.shards]
-    return {
-        "version": SNAPSHOT_VERSION,
-        "n_shards": rt.n_shards,
-        "n_proc": rt.n_proc,
-        "clock": min(int(vc.min()) for vc in vcs) + 1,
-        "shapes": {k: tuple(v) for k, v in rt._shapes.items()},
-        "shards": [s.state() for s in rt.shards],
-        "clock_vcs": vcs,
-    }
+    bootstrap arrives.
+
+    Elastic membership: only the *active* shards of the current epoch are
+    captured (their row sets cover the master exactly), under the
+    membership op lock so a snapshot can never interleave with a live
+    re-partition's install window."""
+    with rt.membership.op_lock:
+        acts = [s for s in rt.shards if rt.partition.owns(s.sid)]
+        vcs = [s.vc_snapshot() for s in acts]
+        return {
+            "version": SNAPSHOT_VERSION,
+            "n_shards": len(acts),
+            "n_proc": rt.n_proc,
+            "clock": min(int(vc.min()) for vc in vcs) + 1,
+            "shapes": {k: tuple(v) for k, v in rt._shapes.items()},
+            "shards": [s.state() for s in acts],
+            "clock_vcs": vcs,
+        }
 
 
 def assemble_master(snap: dict) -> Dict[str, np.ndarray]:
@@ -73,6 +80,37 @@ def assemble_master(snap: dict) -> Dict[str, np.ndarray]:
     return out
 
 
+def validate_vcs(snap: dict) -> None:
+    """Refuse a snapshot whose vector-clock stamps are malformed or
+    internally inconsistent (tampering, truncation, bit rot): every vc must
+    be a 1-D integer array of ``n_proc`` entries, each in ``[-1, 2^48)``,
+    and the stamped completed-clock frontier must equal the frontier the
+    vcs imply.  A corrupted vc would let a serving replica stamp stale
+    values as fresh, so a bad snapshot is rejected loudly instead."""
+    vcs = snap.get("clock_vcs")
+    if not vcs:
+        return
+    n_proc = snap.get("n_proc")
+    for sid, vc in enumerate(vcs):
+        a = np.asarray(vc)
+        if (a.ndim != 1 or not np.issubdtype(a.dtype, np.integer)
+                or (n_proc is not None and a.shape[0] != n_proc)):
+            raise ValueError(
+                f"snapshot vector clock for shard {sid} is malformed "
+                f"(shape {a.shape}, dtype {a.dtype}); refusing to restore")
+        if a.size and (int(a.min()) < -1 or int(a.max()) >= 1 << 48):
+            raise ValueError(
+                f"snapshot vector clock for shard {sid} has out-of-range "
+                f"entries ({a.tolist()}); refusing a tampered snapshot")
+    clock = snap.get("clock")
+    if clock is not None:
+        implied = min(int(np.asarray(vc).min()) for vc in vcs) + 1
+        if clock != implied:
+            raise ValueError(
+                f"snapshot clock stamp {clock} contradicts its vector "
+                f"clocks (implied {implied}); refusing a tampered snapshot")
+
+
 def conservative_vc(snap: dict, n_shards: int, n_proc: int) -> np.ndarray:
     """Per-(shard, process) vector-clock seed for a serving-tier replica
     bootstrapping from this snapshot: the per-process minimum across the
@@ -81,6 +119,7 @@ def conservative_vc(snap: dict, n_shards: int, n_proc: int) -> np.ndarray:
     (the same re-partition-safety argument as :func:`assemble_master`);
     falls back to the all ``-1`` vc when the snapshot predates vc stamping
     or the process count differs."""
+    validate_vcs(snap)
     vcs = snap.get("clock_vcs")
     if not vcs or snap.get("n_proc") != n_proc:
         return np.full((n_shards, n_proc), -1, dtype=np.int64)
@@ -105,6 +144,7 @@ def restore_into(rt, snap: dict) -> None:
     """
     if snap.get("version") != SNAPSHOT_VERSION:
         raise ValueError(f"unsupported snapshot version {snap.get('version')}")
+    validate_vcs(snap)
     master = assemble_master(snap)
     if set(master) != set(rt._x0):
         raise ValueError(f"snapshot keys {sorted(master)} != runtime keys "
@@ -114,8 +154,9 @@ def restore_into(rt, snap: dict) -> None:
             raise ValueError(f"snapshot shape mismatch for {key!r}: "
                              f"{snap['shapes'][key]} != {rt._shapes[key]}")
         rt._x0[key][...] = full
-        for sid, shard in enumerate(rt.shards):
-            shard.dense[key][...] = full[rt._shard_rows[key][sid]]
+        for shard in rt.shards:
+            rows = rt.partition.rows_of(key, shard.sid)
+            shard.dense[key][...] = full[rows]
 
 
 def save_snapshot(path, snap: dict) -> None:

@@ -44,6 +44,7 @@ import os
 import pickle
 import platform
 import queue
+import select
 import socket
 import struct
 import threading
@@ -196,11 +197,15 @@ class WireChannel:
     """
 
     def __init__(self, name: str, write: Callable[[bytes], None],
-                 max_frame: Optional[int] = None):
+                 max_frame: Optional[int] = None,
+                 try_write: Optional[Callable[[bytes], bool]] = None,
+                 room: Optional[Callable[[], int]] = None):
         self.name = name
         self._write = write
         self._max_frame = max_frame    # soft cap: split batches above this
-        self._seq = 0
+        self._try_write = try_write    # non-blocking sink (drop-and-resync)
+        self._room = room              # cheap free-space probe, if the sink
+        self._seq = 0                  # can tell (shm rings can)
         self._lock = threading.Lock()
 
     def send(self, msg) -> None:
@@ -214,6 +219,36 @@ class WireChannel:
                 m.seq = self._seq
                 self._seq += 1
             self._write_frames(msgs)
+
+    # -------------------------------------------------- non-blocking sends
+    @property
+    def can_try(self) -> bool:
+        return self._try_write is not None
+
+    def room(self) -> int:
+        """Free sink bytes if the backend can tell, else a large number."""
+        return self._room() if self._room is not None else (1 << 62)
+
+    def try_send_many(self, msgs: list) -> bool:
+        """Send one frame without blocking; False (and NO seq consumed —
+        the stamp rolls back) when the sink has no room right now.  The
+        serving publish path uses this so a wedged replica can never stall
+        the shard: its frames are dropped and it is re-bootstrapped with a
+        fresh in-stream state once the sink drains."""
+        if not msgs:
+            return True
+        if self._try_write is None:
+            self.send_many(msgs)
+            return True
+        with self._lock:
+            for m in msgs:
+                m.seq = self._seq
+                self._seq += 1
+            frame = encode_frame(msgs)
+            if self._try_write(frame):
+                return True
+            self._seq -= len(msgs)     # dropped: the stream never saw them
+            return False
 
     def _write_frames(self, msgs: list) -> None:
         """Encode and write, halving batches that exceed the frame cap (a
@@ -273,6 +308,38 @@ class TcpConn:
 
     def write(self, data: bytes) -> None:
         self.sock.sendall(data)
+
+    def room(self) -> int:
+        """Approximate free kernel send-buffer bytes (Linux SIOCOUTQ:
+        SO_SNDBUF minus unsent queued bytes).  Where the ioctl is
+        unavailable, falls back to 'unknown' (a large number) and
+        :meth:`try_write` degrades to a select()-writability probe."""
+        try:
+            import fcntl
+            import termios
+            queued = struct.unpack(
+                "i", fcntl.ioctl(self.sock, termios.TIOCOUTQ, b"\0" * 4))[0]
+            sndbuf = self.sock.getsockopt(socket.SOL_SOCKET,
+                                          socket.SO_SNDBUF)
+            return max(0, sndbuf - queued)
+        except (OSError, ImportError, AttributeError):
+            return 1 << 62
+
+    def try_write(self, data: bytes) -> bool:
+        """Non-blocking write: refuse unless the whole frame fits in the
+        free kernel send buffer right now (so the sendall below cannot
+        block on a wedged peer).  On hosts without the queued-bytes ioctl
+        this degrades to a select() probe, which only proves *some* room —
+        the shm serving transport keeps the hard no-stall guarantee."""
+        free = self.room()
+        if free < len(data):
+            return False
+        if free == 1 << 62:                # unknown: fall back to select
+            _, writable, _ = select.select([], [self.sock], [], 0)
+            if not writable:
+                return False
+        self.sock.sendall(data)
+        return True
 
     def read_chunk(self) -> Optional[bytes]:
         data = self.sock.recv(1 << 16)
@@ -380,6 +447,13 @@ class ShmRing:
     counters are updated strictly *after* the corresponding memcpy, which on
     CPython (no store reordering across bytecode, x86 TSO) makes the data
     visible before the cursor that publishes it.
+
+    Both sides additionally *validate* every cross-process cursor read
+    (``head <= tail <= head + capacity``): on some virtualized hosts a read
+    of the peer's cursor can transiently return a stale value, and acting
+    on one would rewind the read cursor (stream replay) or overstate free
+    space (overwrite).  A bogus reading is treated as "empty"/"full" and
+    retried — monotone cursors guarantee a sane reading follows.
     """
 
     HDR = 16
@@ -413,12 +487,8 @@ class ShmRing:
     def write(self, data: bytes, deadline: float = float("inf"),
               abort: Optional[Callable[[], bool]] = None) -> None:
         """Block (spin + short sleep) until `data` fits, then publish it."""
-        n = len(data)
-        if n > self.capacity:
-            raise ValueError(
-                f"frame of {n} bytes exceeds ring capacity {self.capacity}")
         spins = 0
-        while self.capacity - (self._tail() - self._head()) < n:
+        while not self.try_write(data):
             spins += 1
             if spins > 100:
                 if time.monotonic() > deadline:
@@ -426,6 +496,29 @@ class ShmRing:
                 if abort is not None and abort():
                     raise RuntimeError("shm ring write aborted")
                 time.sleep(2e-4)
+
+    def free_bytes(self) -> int:
+        """Bytes writable right now, from the producer's view.
+
+        ``tail`` is the producer's own cursor (trusted); ``head`` crosses a
+        process boundary, and on virtualized hosts a read can transiently
+        return a stale value — an overstated head would report free space
+        that isn't and let the producer overwrite unread bytes, so any
+        out-of-range reading clamps to "full" and the caller retries (the
+        cursors are monotone: a sane reading always comes around)."""
+        used = self._tail() - self._head()
+        if used < 0 or used > self.capacity:
+            return 0                    # stale/torn cursor read: treat full
+        return self.capacity - used
+
+    def try_write(self, data: bytes) -> bool:
+        """Publish `data` iff it fits right now; never blocks or spins."""
+        n = len(data)
+        if n > self.capacity:
+            raise ValueError(
+                f"frame of {n} bytes exceeds ring capacity {self.capacity}")
+        if self.free_bytes() < n:
+            return False
         tail = self._tail()
         pos = tail % self.capacity
         first = min(n, self.capacity - pos)
@@ -434,13 +527,22 @@ class ShmRing:
         if first < n:                       # wrap around to the start
             self.buf[self.HDR:self.HDR + n - first] = data[first:]
         self._set_tail(tail + n)
+        return True
 
     # consumer -------------------------------------------------------------
     def read_available(self) -> bytes:
-        """Drain and return whatever bytes are currently published."""
+        """Drain and return whatever bytes are currently published.
+
+        ``head`` is the consumer's own cursor (trusted); ``tail`` crosses a
+        process boundary and can transiently read stale on virtualized
+        hosts.  A bogus reading (behind head, or further ahead than the
+        ring could hold) must NOT reach the arithmetic below — a negative
+        count would *rewind* head and replay the whole stream — so it is
+        treated as empty and retried; the doorbell byte that announced the
+        real frame persists in the pipe, so no wakeup is lost."""
         head, tail = self._head(), self._tail()
         n = tail - head
-        if n == 0:
+        if n <= 0 or n > self.capacity:
             return b""
         pos = head % self.capacity
         first = min(n, self.capacity - pos)
@@ -526,6 +628,17 @@ def ring_writer(ring: ShmRing, bell_w: int,
         ring.write(data, deadline)
         ShmEdge.ring_bell(bell_w)
     return write
+
+
+def try_ring_writer(ring: ShmRing, bell_w: int) -> Callable[[bytes], bool]:
+    """Non-blocking byte sink for ``WireChannel.try_send_many``: publish iff
+    the frame fits right now, ringing the bell only on success."""
+    def try_write(data: bytes) -> bool:
+        if ring.try_write(data):
+            ShmEdge.ring_bell(bell_w)
+            return True
+        return False
+    return try_write
 
 
 def ring_reader(ring: ShmRing, bell_r: int,

@@ -1,0 +1,318 @@
+"""Seeded chaos / fault-injection harness (no hypothesis — not installed).
+
+Two generators, one seed space:
+
+* :func:`random_schedule` — a seeded random *workload*: policy drawn from
+  SSP/VAP/CVAP (strong and weak), per-worker compute-time skew, stragglers,
+  and network latency/jitter for the simulator leg.  The simulator is the
+  paper's executable spec; :func:`assert_paper_bounds` checks the Lemma
+  bounds *exactly* on whatever it observed (zero recorded violations, clock
+  staleness ≤ s, element-wise unsynchronized magnitude ≤ max(u, v_thr),
+  strong-VAP half-sync ≤ max(u, v_thr)).
+
+* :func:`random_membership_script` — a seeded random schedule of live
+  membership faults for the *runtime* leg: add, remove, and kill/rejoin
+  (remove-then-re-add of the same slot, which exercises slot re-activation
+  and the stale-marker epoch filter).  The spec is partition-free, which is
+  precisely the correctness claim under test: membership change must be
+  invisible in the final state, in the bounds, and in the update counters.
+
+The runtime leg (:func:`chaos_run`) runs a free 4-worker interleaving with
+the scripted faults, optionally a serving gateway issuing SLO'd reads and a
+seeded replica wedger, and returns everything the caller needs to assert
+(a) final state == simulator on deterministic schedules, (b) mid-run
+staleness stamps ≤ bound, (c) zero lost/duplicated updates by counter
+audit (the runtime's ``_final_checks`` folds the per-process counters into
+``stats.violations``; :func:`assert_counters` re-checks them explicitly).
+"""
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import AsyncPS, NetworkModel, policies
+from repro.runtime import MembershipPlan, PSRuntime, ReadGateway
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+
+def x0():
+    return {"a": np.arange(32, dtype=float).reshape(8, 4) / 2.0,
+            "b": np.ones(5)}
+
+
+def det_fn(seed: int):
+    """Deterministic integer deltas, a pure function of (worker, clock): the
+    update *set* is interleaving- and membership-independent, so every leg
+    must converge to exactly x0 + sum(deltas)."""
+    def fn(w, clock, view, rng):
+        r = np.random.default_rng((seed, w, clock))
+        return {"a": r.integers(-3, 4, size=(8, 4)).astype(float),
+                "b": r.integers(-3, 4, size=5).astype(float)}
+    return fn
+
+
+def expected_final(seed: int, n_workers: int, n_clocks: int
+                   ) -> Dict[str, np.ndarray]:
+    fn = det_fn(seed)
+    out = {k: v.astype(float) for k, v in x0().items()}
+    for w in range(n_workers):
+        for c in range(n_clocks):
+            for k, d in fn(w, c, None, None).items():
+                out[k] = out[k] + d
+    return out
+
+
+def random_policy(rng: np.random.Generator):
+    """A seeded draw over the paper's bounded policies (SSP / VAP / CVAP,
+    strong and weak)."""
+    kind = rng.choice(["ssp", "vap", "cvap", "cvap_strong"])
+    s = int(rng.integers(1, 4))
+    vthr = float(rng.uniform(1.0, 6.0))
+    if kind == "ssp":
+        return f"ssp{s}", policies.ssp(s)
+    if kind == "vap":
+        return f"vap{vthr:.1f}", policies.vap(vthr)
+    strong = kind == "cvap_strong"
+    return (f"cvap{s}_{vthr:.1f}{'s' if strong else ''}",
+            policies.cvap(s, vthr, strong=strong))
+
+
+def random_schedule(seed: int) -> dict:
+    """A seeded random simulator workload: policy + compute skew +
+    stragglers + network model."""
+    rng = np.random.default_rng(seed)
+    name, pol = random_policy(rng)
+    n_workers = int(rng.integers(3, 6))
+    tpp = 1 if n_workers % 2 else int(rng.choice([1, 2]))
+    base = float(rng.uniform(0.2, 1.5))
+    skew = rng.uniform(0.5, 2.0, size=n_workers)
+    straggler = {}
+    if rng.random() < 0.5:
+        straggler[int(rng.integers(0, n_workers))] = float(rng.uniform(2, 6))
+    net = NetworkModel(base_delay=float(rng.uniform(0.01, 0.8)),
+                       jitter=float(rng.uniform(0.0, 0.5)), seed=seed)
+    return {
+        "name": name, "policy": pol, "n_workers": n_workers, "tpp": tpp,
+        "compute_time": lambda w: base * float(skew[w]),
+        "straggler": straggler, "network": net, "seed": seed,
+    }
+
+
+def run_sim_schedule(sched: dict, n_clocks: int):
+    """Drive the simulator (the spec) through a random schedule; returns
+    ``(ps, stats)``; callers assert the paper's bounds on the stats."""
+    ps = AsyncPS(sched["n_workers"], sched["policy"], x0(),
+                 network=sched["network"],
+                 threads_per_process=sched["tpp"],
+                 compute_time=sched["compute_time"],
+                 straggler=sched["straggler"], seed=sched["seed"])
+    stats = ps.run(det_fn(sched["seed"]), n_clocks)
+    return ps, stats
+
+
+def assert_paper_bounds(pol, stats) -> None:
+    """The paper's Lemma bounds, asserted exactly on observed maxima."""
+    assert stats.violations == [], stats.violations[:5]
+    if pol.clock_bounded:
+        assert stats.max_observed_staleness <= pol.staleness
+    if pol.value_bounded:
+        bound = max(stats.max_update_mag, pol.value_bound)   # max(u, v_thr)
+        assert stats.max_unsynced_mag <= bound + 1e-9
+        if pol.strong:
+            assert stats.max_halfsync_mag <= bound + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# membership fault scripts
+# ---------------------------------------------------------------------------
+
+
+def random_membership_script(seed: int, n_clocks: int, n_shards: int,
+                             max_shards: int, n_events: int = 4
+                             ) -> MembershipPlan:
+    """A seeded schedule of live membership faults: add / remove /
+    kill+rejoin, at clock boundaries spread over the middle of the run.
+    Tracks the active set so every event is valid when it fires."""
+    rng = np.random.default_rng(seed ^ 0x5EED)
+    active = set(range(n_shards))
+    clocks = sorted(rng.choice(
+        np.arange(2, max(3, n_clocks - 4)),
+        size=min(n_events, max(1, n_clocks - 6)), replace=False).tolist())
+    spec: List[Tuple[int, str, Optional[int]]] = []
+    killed: List[int] = []
+    for c in clocks:
+        fresh = sorted(set(range(max_shards)) - active - set(killed))
+        ops = []
+        if fresh:
+            ops.append("add")
+        if len(active) > 1:
+            ops.extend(["remove", "kill"])
+        if killed:                            # killed slots are never active
+            ops.append("rejoin")
+        if not ops:
+            continue
+        op = str(rng.choice(ops))
+        if op == "add":
+            sid = fresh[0]
+            spec.append((int(c), "add", sid))
+            active.add(sid)
+        elif op == "rejoin":                  # re-activate a killed slot
+            sid = killed.pop(0)
+            spec.append((int(c), "add", sid))
+            active.add(sid)
+        else:                                 # remove / kill
+            sid = int(rng.choice(sorted(active)))
+            spec.append((int(c), "remove", sid))
+            active.discard(sid)
+            if op == "kill":
+                killed.append(sid)
+    return MembershipPlan.parse(spec)
+
+
+# ---------------------------------------------------------------------------
+# runtime chaos leg
+# ---------------------------------------------------------------------------
+
+
+class ReplicaWedger:
+    """Seeded replica fault injector: wedges a random replica's publish
+    edges, holds, releases, repeats — the serving tier must keep honoring
+    SLO stamps (stale replicas drop out of the rotation via their vc) and
+    recover the wedged replica exactly via drop-and-resync.
+
+    Stands down once the run's completed-clock frontier passes
+    ``quiet_after`` so the final publish cycles can resync every replica
+    while write traffic (and hence shard publish cycles) still exists."""
+
+    def __init__(self, rset, seed: int, rt=None, quiet_after: int = 0,
+                 period: float = 0.05):
+        self.rset = rset
+        self.rt = rt
+        self.quiet_after = quiet_after
+        self.rng = np.random.default_rng(seed ^ 0xFA11)
+        self.period = period
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True,
+                                       name="chaos-wedger")
+
+    def _quiet(self) -> bool:
+        return (self.rt is not None and self.quiet_after
+                and self.rt.completed_clock() >= self.quiet_after)
+
+    def _run(self) -> None:
+        while not self._stop.is_set() and not self._quiet():
+            rid = int(self.rng.integers(0, len(self.rset.replicas)))
+            self.rset.wedge(rid, True)
+            time.sleep(self.period * float(self.rng.uniform(0.5, 2.0)))
+            self.rset.wedge(rid, False)
+            time.sleep(self.period * float(self.rng.uniform(0.2, 1.0)))
+        for rep in self.rset.replicas:
+            self.rset.wedge(rep.rid, False)
+
+    def start(self) -> None:
+        self.thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.thread.join(timeout=10.0)
+        for rep in self.rset.replicas:
+            self.rset.wedge(rep.rid, False)
+
+
+class SloReader:
+    """Background gateway reader cycling SLOs; records any stamp that
+    exceeds its request (there must be none, ever — including during the
+    migration window)."""
+
+    def __init__(self, gw: ReadGateway, keys=("a", "b")):
+        self.gw = gw
+        self.keys = keys
+        self.bad: List[tuple] = []
+        self.errors: List[BaseException] = []
+        self.n_reads = 0
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._run, daemon=True,
+                                       name="chaos-slo-reader")
+
+    def _run(self) -> None:
+        slos = [0, 1, 3, None, "fresh"]
+        i = 0
+        while not self._stop.is_set():
+            slo = slos[i % len(slos)]
+            key = self.keys[i % len(self.keys)]
+            i += 1
+            try:
+                res = self.gw.read(key, slo=slo, timeout=10.0)
+            except BaseException as e:       # a dead reader would make the
+                self.errors.append(e)        # SLO assertions pass vacuously
+                return
+            self.n_reads += 1
+            if isinstance(slo, int) and res.staleness > slo:
+                self.bad.append((slo, res.staleness, res.source))
+
+    def start(self) -> None:
+        self.thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        self.thread.join(timeout=10.0)
+
+
+def chaos_run(seed: int, pol, n_clocks: int, transport: str = "queue",
+              max_shards: int = 4, n_events: int = 4, serving: bool = False,
+              wedge: bool = False, serving_transport: str = "queue",
+              timeout: float = 110.0):
+    """One full chaos leg: free 4-worker run + scripted membership faults,
+    optionally a gateway under SLO'd reads and a replica wedger (which
+    needs a wire serving transport — queue edges are unbounded and cannot
+    exert backpressure).  Returns ``(rt, stats, plan, reader)``."""
+    plan = random_membership_script(seed, n_clocks, n_shards=2,
+                                    max_shards=max_shards, n_events=n_events)
+    rt = PSRuntime(4, pol, x0(), n_shards=2, threads_per_process=2,
+                   seed=seed, max_shards=max_shards, transport=transport,
+                   membership_plan=plan)
+    reader = wedger = gw = None
+    rt.start(det_fn(seed), n_clocks, timeout=timeout)
+    try:
+        if serving:
+            gw = ReadGateway(rt, n_replicas=2, transport=serving_transport)
+            reader = SloReader(gw)
+            reader.start()
+            if wedge:
+                wedger = ReplicaWedger(gw.replicas, seed, rt=rt,
+                                       quiet_after=int(n_clocks * 0.7))
+                wedger.start()
+        stats = rt.wait()
+    finally:
+        if wedger is not None:
+            wedger.stop()
+        if reader is not None:
+            reader.stop()
+    if gw is not None:
+        reader.gw_stats = gw.stats
+        reader.replica_errors = list(gw.replicas.errors)
+        reader.pub_drops = gw.replicas.pub_drops
+        reader.pub_resyncs = gw.replicas.pub_resyncs
+        time.sleep(0.2)                # let the last publish cycle drain
+        stale = gw.replicas.stale_replicas
+        reader.final_replicas = [
+            {k: rep.serve(k)[0] for k in x0()}
+            for rep in gw.replicas.replicas
+            if not rep.poisoned and rep.rid not in stale]
+        gw.close()
+    return rt, stats, plan, reader
+
+
+def assert_counters(rt) -> None:
+    """Explicit zero-lost / zero-duplicated audit: every update part each
+    client process sent was applied by exactly one shard slot."""
+    applied = np.zeros(rt.n_proc, dtype=np.int64)
+    for s in rt.shards:
+        applied += s.applied_parts
+    assert applied.tolist() == rt._parts_sent.tolist(), (
+        f"lost/duplicated updates: sent {rt._parts_sent.tolist()} "
+        f"applied {applied.tolist()}")

@@ -1,0 +1,170 @@
+"""Chaos / fault-injection conformance suite (tests/chaos.py harness).
+
+Two legs, one seed space:
+
+* **Simulator property matrix** — seeded random schedules (policy, compute
+  skew, stragglers, network) driven through long runs of the executable
+  spec, asserting the paper's Lemma bounds *exactly* on every observed
+  maximum (no hypothesis — the generator is a plain seeded rng).
+
+* **Runtime chaos** — the same workloads on the live runtime under free
+  4-worker interleaving with seeded membership faults (add / remove /
+  kill+rejoin) and, in the serving leg, SLO'd gateway reads with a seeded
+  replica wedger.  Asserts (a) final state == x0 + sum(updates) == the
+  membership-free spec, (b) mid-run staleness/value stamps within bound
+  (the runtime's own recorded violations), (c) zero lost/duplicated
+  updates by counter audit.
+
+The quick loop runs the 30-clock smoke (``-m "chaos and not slow"``); the
+nightly tier-1 suite runs the full seeded 200-clock matrix (``slow``).
+"""
+import numpy as np
+import pytest
+
+from repro.core import policies
+
+from chaos import (assert_counters, assert_paper_bounds, chaos_run,
+                   expected_final, run_sim_schedule, random_schedule, x0)
+
+pytestmark = pytest.mark.chaos
+
+
+# ---------------------------------------------------------------------------
+# simulator leg: seeded random schedules obey the Lemma bounds exactly
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sim_random_schedule_bounds_smoke(seed):
+    sched = random_schedule(seed)
+    _, stats = run_sim_schedule(sched, n_clocks=30)
+    assert_paper_bounds(sched["policy"], stats)
+    assert stats.n_updates == sched["n_workers"] * 30 * 2
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(8))
+def test_sim_random_schedule_bounds_full(seed):
+    """200-clock runs: long enough that staleness, value-gate blocking, and
+    strong-VAP queueing all actually engage (asserted non-vacuous for the
+    bounded dimensions that apply)."""
+    sched = random_schedule(seed)
+    pol = sched["policy"]
+    _, stats = run_sim_schedule(sched, n_clocks=200)
+    assert_paper_bounds(pol, stats)
+    assert stats.n_updates == sched["n_workers"] * 200 * 2
+    if pol.clock_bounded:
+        assert stats.max_observed_staleness >= 0
+    if pol.value_bounded:
+        assert stats.max_unsynced_mag > 0.0
+
+
+# ---------------------------------------------------------------------------
+# runtime leg: membership faults under free interleaving
+# ---------------------------------------------------------------------------
+
+_POLICIES = [
+    ("ssp3", policies.ssp(3)),
+    ("vap", policies.vap(4.5)),
+    ("cvap", policies.cvap(3, 4.5)),
+]
+
+
+def _assert_chaos_outcome(rt, stats, plan, seed, n_clocks):
+    assert stats.violations == [], stats.violations[:5]
+    fired = [r for _, r in plan.results if r == "ok"]
+    assert len(fired) == len(plan.events), plan.results   # every fault fired
+    assert_counters(rt)
+    assert stats.n_updates == 4 * n_clocks * 2
+    if rt.policy.clock_bounded:
+        assert stats.max_observed_staleness <= rt.policy.staleness
+    for k, ref in expected_final(seed, 4, n_clocks).items():
+        np.testing.assert_array_equal(
+            rt.master_value(k).reshape(ref.shape), ref,
+            err_msg=f"chaos seed={seed} master[{k}]")
+
+
+@pytest.mark.parametrize("polname,pol", _POLICIES, ids=[p[0] for p in _POLICIES])
+def test_runtime_membership_chaos_smoke(polname, pol):
+    seed = {"ssp3": 21, "vap": 22, "cvap": 23}[polname]
+    n_clocks = 30
+    rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, n_events=3)
+    _assert_chaos_outcome(rt, stats, plan, seed, n_clocks)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("polname,pol", _POLICIES, ids=[p[0] for p in _POLICIES])
+@pytest.mark.parametrize("seed", [31, 32])
+def test_runtime_membership_chaos_full(polname, pol, seed):
+    """The full matrix: 200 free clocks, 5 seeded membership faults
+    (including kill+rejoin slot re-activations), bounds asserted across
+    every migration window."""
+    n_clocks = 200
+    rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, n_events=5)
+    _assert_chaos_outcome(rt, stats, plan, seed, n_clocks)
+    if pol.clock_bounded:
+        # asynchrony actually happened: the checks were not vacuous
+        assert stats.max_observed_staleness > 0
+
+
+@pytest.mark.slow
+def test_runtime_membership_chaos_multiprocess():
+    """Forked OS clients (shm rings) under membership faults: the epoch
+    barrier crosses the real wire."""
+    seed = 41
+    n_clocks = 40
+    rt, stats, plan, _ = chaos_run(seed, policies.ssp(3), n_clocks,
+                                   transport="shm", n_events=3,
+                                   timeout=150.0)
+    assert stats.violations == [], stats.violations[:5]
+    assert [r for _, r in plan.results] == ["ok"] * len(plan.events)
+    for k, ref in expected_final(seed, 4, n_clocks).items():
+        np.testing.assert_array_equal(rt.master_value(k).reshape(ref.shape),
+                                      ref)
+
+
+# ---------------------------------------------------------------------------
+# serving leg: SLO stamps + wedged replicas through membership chaos
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.serving
+def test_serving_chaos_smoke():
+    seed = 51
+    n_clocks = 40
+    rt, stats, plan, reader = chaos_run(seed, policies.ssp(3), n_clocks,
+                                        n_events=2, serving=True)
+    assert stats.violations == [], stats.violations[:5]
+    assert reader.bad == [], reader.bad[:5]
+    assert reader.errors == [], reader.errors[:3]
+    assert reader.n_reads > 0
+    assert reader.replica_errors == []
+    for vals in reader.final_replicas:
+        for k, ref in expected_final(seed, 4, n_clocks).items():
+            np.testing.assert_array_equal(vals[k].reshape(ref.shape), ref)
+
+
+@pytest.mark.slow
+@pytest.mark.serving
+def test_serving_chaos_with_wedged_replicas_full():
+    """Membership faults + a seeded replica wedger: stale replicas drop out
+    of the rotation by their vector clock (stamps stay honest), and every
+    recovered replica converges to the master exactly via the in-stream
+    drop-and-resync re-bootstrap."""
+    seed = 61
+    n_clocks = 150
+    rt, stats, plan, reader = chaos_run(seed, policies.ssp(3), n_clocks,
+                                        n_events=4, serving=True, wedge=True,
+                                        serving_transport="shm",
+                                        timeout=150.0)
+    assert stats.violations == [], stats.violations[:5]
+    assert reader.bad == [], reader.bad[:5]
+    assert reader.errors == [], reader.errors[:3]
+    assert reader.n_reads > 0                 # the reader survived the run
+    assert reader.replica_errors == []
+    # every replica that finished un-stale (the wedger stands down at 70%
+    # of the run, leaving publish cycles to resync) converged exactly
+    assert reader.final_replicas, "every replica ended stale or poisoned"
+    for vals in reader.final_replicas:
+        for k, ref in expected_final(seed, 4, n_clocks).items():
+            np.testing.assert_array_equal(vals[k].reshape(ref.shape), ref)

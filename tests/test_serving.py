@@ -280,3 +280,53 @@ def test_gateway_rejects_bad_slo_and_transport():
             gw.read("a", slo=-1)
     finally:
         gw.close()
+
+
+# ---------------------------------------------------------------------------
+# replica ingest backpressure: drop-and-resync (ROADMAP follow-up)
+# ---------------------------------------------------------------------------
+
+
+def test_wedged_replica_never_stalls_publish_and_resyncs():
+    """A deliberately wedged replica (its ring reader paused) must not
+    stall the shard's publish write: the shard drops its frames once the
+    tiny ring fills (pub_drops > 0), keeps applying updates at full speed,
+    and re-bootstraps the replica with a fresh in-stream state cut once the
+    ring drains — after which the replica equals the master exactly."""
+    def fn(w, clock, view, rng):
+        time.sleep(1e-3)
+        return {"a": rng.normal(0.0, 0.6, size=(8, 4))}
+
+    rt = PSRuntime(2, policies.ssp(3), {"a": np.zeros((8, 4))}, n_shards=2,
+                   seed=0)
+    rt.start(fn, 400, timeout=110)
+    rset = ReplicaSet(rt, n_replicas=2, transport="shm", ring_capacity=1)
+    try:
+        time.sleep(0.1)
+        rset.wedge(0, True)
+        deadline = time.monotonic() + 60
+        while rt.running and rset.pub_drops == 0:
+            assert time.monotonic() < deadline, "wedged ring never filled"
+            time.sleep(0.005)
+        assert rset.pub_drops > 0, "publish should have dropped, not blocked"
+        assert 0 in rset.stale_replicas
+        rset.wedge(0, False)
+        while rt.running and rset.pub_resyncs == 0:
+            assert time.monotonic() < deadline, "recovery resync never came"
+            time.sleep(0.005)
+        st = rt.wait()
+        assert st.violations == [], st.violations[:5]
+        assert rset.pub_resyncs > 0
+        assert rset.errors == [] and rset.violations == []
+        time.sleep(0.5)                    # final publish cycles drain
+        assert 0 not in rset.stale_replicas
+        for rep in rset.replicas:
+            assert not rep.poisoned
+            v, _ = rep.serve("a")
+            np.testing.assert_allclose(
+                v, rt.master_value("a").reshape(v.shape), atol=1e-9,
+                err_msg=f"replica {rep.rid} did not recover exactly")
+    finally:
+        rset.close()
+        if rt.running:
+            rt.wait()

@@ -144,3 +144,102 @@ def test_shard_load_state_rejects_wrong_partition():
     snap = rt.snapshot()
     with pytest.raises(ValueError, match="partition"):
         rt.shards[0].load_state(snap["shards"][1])
+
+
+# ---------------------------------------------------------------------------
+# re-partition edge cases (ISSUE 5 satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_restore_shrinks_to_one_shard():
+    """Everything funnels onto a single shard: the degenerate partition."""
+    rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=3)
+    rt.run(_sched_fn(7), 4, timeout=60)
+    snap = rt.snapshot()
+    rt1 = PSRuntime(2, policies.ssp(1), _x0(), n_shards=1,
+                    restore_from=snap)
+    for k in ("a", "b"):
+        np.testing.assert_array_equal(rt1.master_value(k), rt.master_value(k))
+    # and the shrunken runtime still runs clean
+    st = rt1.run(_sched_fn(7, shift=4), 3, timeout=60)
+    assert st.violations == []
+
+
+def test_restore_grows_with_empty_key_ranges():
+    """8 shards for a 5-row key: three shards own zero rows of "b" — empty
+    dense blocks must restore, apply, snapshot, and read back cleanly."""
+    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt.run(_sched_fn(8), 4, timeout=60)
+    snap = rt.snapshot()
+    rt8 = PSRuntime(2, policies.bsp(), _x0(), n_shards=8,
+                    restore_from=snap)
+    assert sum(rt8.partition.rows_of("b", s).size for s in range(8)) == 5
+    assert any(rt8.partition.rows_of("b", s).size == 0 for s in range(8))
+    for k in ("a", "b"):
+        np.testing.assert_array_equal(rt8.master_value(k), rt.master_value(k))
+    st = rt8.run(_sched_fn(8, shift=4), 3, timeout=60)
+    assert st.violations == []
+    snap8 = rt8.snapshot()
+    assert snap8["n_shards"] == 8
+    for k in ("a", "b"):
+        np.testing.assert_array_equal(
+            snapshot_params(snap8)[k], rt8.master_value(k))
+
+
+def test_restore_under_different_n_proc():
+    """A snapshot from a 2-process run restores into a 3-process runtime:
+    master values re-partition exactly; the vc seed degrades conservatively
+    (conservative_vc falls back to the all -1 vector clock)."""
+    from repro.runtime import conservative_vc
+
+    rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
+                   threads_per_process=1)
+    rt.run(_sched_fn(9), 5, timeout=60)
+    snap = rt.snapshot()
+    assert snap["n_proc"] == 2
+    rt3 = PSRuntime(3, policies.ssp(1), _x0(), n_shards=2,
+                    threads_per_process=1, restore_from=snap)
+    assert rt3.n_proc == 3
+    for k in ("a", "b"):
+        np.testing.assert_array_equal(rt3.master_value(k), rt.master_value(k))
+    vc = conservative_vc(snap, n_shards=2, n_proc=3)
+    assert vc.shape == (2, 3) and (vc == -1).all()
+    st = rt3.run(_sched_fn(9, shift=5), 3, timeout=60)
+    assert st.violations == []
+
+
+def test_tampered_vc_snapshot_refused():
+    """A snapshot whose vector-clock stamps were corrupted must be refused
+    with a clear error — a bad vc would let a serving replica stamp stale
+    values as fresh."""
+    rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2)
+    rt.run(_sched_fn(10), 4, timeout=60)
+    snap = rt.snapshot()
+
+    wrong_shape = {**snap, "clock_vcs": [vc[:1] for vc in snap["clock_vcs"]]}
+    with pytest.raises(ValueError, match="malformed"):
+        PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
+                  restore_from=wrong_shape)
+
+    wrong_dtype = {**snap,
+                   "clock_vcs": [vc.astype(float) for vc in snap["clock_vcs"]]}
+    with pytest.raises(ValueError, match="malformed"):
+        PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
+                  restore_from=wrong_dtype)
+
+    huge = [vc.copy() for vc in snap["clock_vcs"]]
+    huge[0][0] = 1 << 50
+    with pytest.raises(ValueError, match="tampered"):
+        PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
+                  restore_from={**snap, "clock_vcs": huge})
+
+    off_by_one = [vc + 1 for vc in snap["clock_vcs"]]   # frontier shifted:
+    # the stamped clock no longer matches the vcs' implied frontier
+    with pytest.raises(ValueError, match="contradicts"):
+        PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
+                  restore_from={**snap, "clock_vcs": off_by_one})
+
+    # the same validation guards the serving-tier bootstrap path
+    from repro.runtime import conservative_vc
+    with pytest.raises(ValueError, match="malformed"):
+        conservative_vc(wrong_shape, n_shards=2, n_proc=2)

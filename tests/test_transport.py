@@ -423,6 +423,41 @@ def test_shm_ring_write_timeout():
         ring.unlink()
 
 
+def test_shm_ring_survives_stale_cursor_reads():
+    """Cross-process cursor reads can transiently return stale values on
+    virtualized hosts (observed in the wild: a reader briefly seeing
+    tail=0 after thousands of bytes).  A bogus reading must never reach
+    the ring arithmetic — the old code computed a *negative* available
+    count and rewound head, replaying the whole stream."""
+    ring = T.ShmRing.create(64)
+    try:
+        ring.write(b"a" * 10)
+        assert ring.read_available() == b"a" * 10
+        ring.write(b"b" * 10)
+        # simulate a stale tail read (behind head): must read as empty and
+        # must NOT move the head cursor
+        good_tail = ring._tail()
+        ring._set_tail(0)
+        assert ring.read_available() == b""
+        assert ring._head() == 10
+        # ...and a garbage tail far beyond what the ring could hold
+        ring._set_tail(10 + ring.capacity + 1)
+        assert ring.read_available() == b""
+        ring._set_tail(good_tail)
+        assert ring.read_available() == b"b" * 10        # stream intact
+        # producer side: a stale head must clamp free space to "full",
+        # never overstate it (that would overwrite unread bytes)
+        good_head = ring._head()
+        ring._set_head(ring._tail() + 1)
+        assert ring.free_bytes() == 0
+        assert not ring.try_write(b"x")
+        ring._set_head(good_head)
+        assert ring.free_bytes() == ring.capacity
+    finally:
+        ring.close()
+        ring.unlink()
+
+
 # ---------------------------------------------------------------------------
 # tcp end-to-end
 # ---------------------------------------------------------------------------
