@@ -89,25 +89,34 @@ def calibrate_parallelism(seconds: float = 0.5) -> float:
     return 2.0 * one / max(two, 1e-9)
 
 
-def _update_fn(w, clock, view, rng):
+def _mk_update_fn(compute_iters: int):
     """SGD-flavored worker: read the table, grind a few matmuls, push a
     bounded delta.  The compute chain is the point — with real work per
-    clock, transport scaling is measured at a realistic compute:comm ratio."""
-    x = view.get("w")                                   # (64, 8) read path
-    g = rng.normal(0.0, 1.0, size=KEYS["w"])
-    m = rng.normal(0.0, 1.0, size=(64, 64)) / 8.0
-    for _ in range(COMPUTE_ITERS):
-        g = m @ g + 0.1 * x
-        g /= max(1.0, float(np.abs(g).max()))
-    return {"w": 0.01 * g,
-            "b": rng.normal(0.0, 0.01, size=KEYS["b"])}
+    clock, transport scaling is measured at a realistic compute:comm ratio
+    (the zero-copy A/B dials it down to make the run wire-bound instead)."""
+    def _update_fn(w, clock, view, rng):
+        x = view.get("w")                               # (64, 8) read path
+        g = rng.normal(0.0, 1.0, size=KEYS["w"])
+        m = rng.normal(0.0, 1.0, size=(64, 64)) / 8.0
+        for _ in range(compute_iters):
+            g = m @ g + 0.1 * x
+            g /= max(1.0, float(np.abs(g).max()))
+        return {"w": 0.01 * g,
+                "b": rng.normal(0.0, 0.01, size=KEYS["b"])}
+    return _update_fn
+
+
+_update_fn = _mk_update_fn(COMPUTE_ITERS)
 
 
 def _one(name: str, policy, n_workers: int, transport: str,
-         clocks: int) -> Dict:
+         clocks: int, zero_copy: Optional[bool] = None,
+         ps_kernels: bool = False, update_fn=None,
+         wire: Optional[str] = None) -> Dict:
     x0 = {k: np.zeros(shape) for k, shape in KEYS.items()}
     rt = PSRuntime(n_workers, policy, x0, n_shards=2,
-                   threads_per_process=1, seed=0, transport=transport)
+                   threads_per_process=1, seed=0, transport=transport,
+                   zero_copy=zero_copy, ps_kernels=ps_kernels)
     lat: List[float] = []
     stop = threading.Event()
 
@@ -119,7 +128,7 @@ def _one(name: str, policy, n_workers: int, transport: str,
             time.sleep(5e-4)
 
     t0 = time.perf_counter()
-    rt.start(_update_fn, clocks, timeout=600)
+    rt.start(update_fn or _update_fn, clocks, timeout=600)
     th = threading.Thread(target=reader, daemon=True)
     th.start()
     stats = rt.wait()
@@ -130,8 +139,9 @@ def _one(name: str, policy, n_workers: int, transport: str,
     q = np.quantile(np.asarray(lat), [0.5, 0.99]) if lat else [0.0, 0.0]
     blocked = (stats.block_time_clock + stats.block_time_value) / (
         max(wall, 1e-9) * n_workers)
-    return {
-        "name": f"runtime/{name}/{transport}/w{n_workers}",
+    suffix = f"/{wire}" if wire else ""
+    row = {
+        "name": f"runtime/{name}/{transport}/w{n_workers}{suffix}",
         "policy": name,
         "transport": transport,
         "workers": n_workers,
@@ -143,6 +153,29 @@ def _one(name: str, policy, n_workers: int, transport: str,
         "blocked_frac": blocked,
         "n_reads": len(lat),
     }
+    if wire:
+        row["wire"] = wire
+    return row
+
+
+def run_zero_copy_ab(workers: int = 2, clocks: int = 12,
+                     policy_name: str = "ssp3") -> List[Dict]:
+    """A/B rows for the shm wire at equal workers: the pickle-5 frame path
+    vs the zero-copy raw wire + PS kernels.  Compute per clock is dialed
+    way down so the run is wire/apply-bound — this is the configuration the
+    zero-copy work targets, and the CI gate compares exactly these rows."""
+    from repro.kernels import pallas_mode
+    pallas_mode()       # warm the one-time jax import out of the timed runs
+    fn = _mk_update_fn(2)
+    rows = []
+    for wire, zc, pk in (("pickle", False, False), ("zero_copy", True, True)):
+        # best-of-2: scheduler noise on small hosts swamps a single short
+        # run, and the gate below must not flake on it
+        runs = [_one(policy_name, ssp(3), workers, "shm", clocks,
+                     zero_copy=zc, ps_kernels=pk, update_fn=fn, wire=wire)
+                for _ in range(2)]
+        rows.append(max(runs, key=lambda r: r["updates_per_s"]))
+    return rows
 
 
 def run(transports: Sequence[str] = ("queue", "proc"),
@@ -189,6 +222,10 @@ def main() -> None:
                     help="comma list from queue,tcp,shm,proc")
     ap.add_argument("--workers", default=None, help="comma list, e.g. 1,2,4")
     ap.add_argument("--clocks", type=int, default=None)
+    ap.add_argument("--ab-zero-copy", action="store_true",
+                    help="append shm zero-copy vs pickle A/B rows (equal "
+                         "workers, wire-bound traffic) and FAIL if the "
+                         "zero-copy path is slower than the pickle path")
     args = ap.parse_args()
 
     transports = (args.transports.split(",") if args.transports
@@ -227,9 +264,22 @@ def main() -> None:
                 and (("proc", w) in per and ("queue", w) in per)):
             print(f"# w{w}: proc vs queue x"
                   f"{per[('proc', w)] / max(per[('queue', w)], 1e-9):.2f}")
+    gate_failed = False
+    if args.ab_zero_copy:
+        ab = run_zero_copy_ab(workers=2, clocks=args.clocks or 12)
+        rows.extend(ab)
+        by_wire = {r["wire"]: r["updates_per_s"] for r in ab}
+        x = by_wire["zero_copy"] / max(by_wire["pickle"], 1e-9)
+        print(f"# shm wire A/B @ w2: zero-copy {by_wire['zero_copy']:.0f} "
+              f"upd/s vs pickle {by_wire['pickle']:.0f} upd/s (x{x:.2f})")
+        if x < 1.0:
+            print("# GATE FAILED: zero-copy path slower than pickle path")
+            gate_failed = True
     if args.json:
         write_json(rows, args.json, parallel_x2=cal)
         print(f"# wrote {args.json}")
+    if gate_failed:
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

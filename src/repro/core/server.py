@@ -378,10 +378,16 @@ class AsyncPS:
         self._delivered_prefix[u.process, q] += 1
         if len(u.delivered_to) == self.n_proc - 1:
             u.t_fully_delivered = self.t
-            uns = self.unsynced[u.worker][u.key] - u.delta
-            self.unsynced[u.worker][u.key] = np.where(np.abs(uns) < 1e-12, 0.0, uns)
-            hs = self.halfsync[u.key] - np.abs(u.delta)
-            self.halfsync[u.key] = np.where(np.abs(hs) < 1e-12, 0.0, hs)
+            # exact subtraction: the accumulators received exactly u.delta /
+            # |u.delta| when the update started, so the inverse is exact —
+            # snapping sub-1e-12 residuals to zero here could discard other
+            # legitimately in-flight tiny deltas sharing the accumulator
+            # (the value/strong gates keep their own > 1e-12 dead zone, so
+            # residue from mixed orderings never wedges a worker).  Keeps
+            # the spec in lockstep with the runtime's VAP accounting.
+            self.unsynced[u.worker][u.key] = \
+                self.unsynced[u.worker][u.key] - u.delta
+            self.halfsync[u.key] = self.halfsync[u.key] - np.abs(u.delta)
             # half-sync budget freed: release queued deliveries for this key
             dq = self.delivery_queue.get(u.key)
             while dq:

@@ -12,11 +12,19 @@ CPU dry-run lowers and the roofline reads.
 """
 import os
 
+_PROBED: str = ""
+
 
 def pallas_mode() -> str:
     """'off' | 'interpret' | 'on'."""
     env = os.environ.get("REPRO_PALLAS", "").lower()
     if env in ("interpret", "on", "off"):
         return env
-    import jax
-    return "on" if jax.default_backend() == "tpu" else "off"
+    # the backend probe is cached: this sits on the PS apply/flush hot path
+    # (ps_kernels=True calls it per batch), and the first call pays the
+    # whole jax import — the answer cannot change within a process
+    global _PROBED
+    if not _PROBED:
+        import jax
+        _PROBED = "on" if jax.default_backend() == "tpu" else "off"
+    return _PROBED

@@ -1,0 +1,85 @@
+"""Segment scatter-add Pallas kernel for the PS dense-block apply.
+
+The shard hot path lands a coalesced batch of (rows, delta) updates into a
+dense block with `np.add.at(dense, rows, delta)`.  This kernel performs the
+same accumulation on-chip: row indices live in SMEM, the dense block and the
+delta batch are tiled along lanes, and a sequential fori_loop adds delta row
+i into dense row rows[i] in submission order — the same order `np.add.at`
+uses — so duplicate rows accumulate bitwise-identically to the numpy path.
+
+Conventions:
+  * rows may contain the sentinel index R (== dense.shape[0]); the wrapper
+    appends a dedicated zero "dummy" row at index R so padded entries land
+    there and never touch real state.
+  * Every pl.load/pl.store axis is a pl.dslice — jax 0.4.37's interpret-mode
+    discharge rules choke on bare int indices mixed with dynamic slices
+    (same workaround as kernels/rglru_scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SUBLANES = 8
+LANES = 128
+
+
+def _kernel(rows_ref, delta_ref, dense_ref, out_ref):
+    out_ref[...] = dense_ref[...]
+    n, w = delta_ref.shape
+
+    def body(i, carry):
+        # All dslice starts must share the loop index dtype: under x64 the
+        # implicit 0 of dslice(None) widens to int64 while SMEM rows stay
+        # int32, and dynamic_slice rejects mixed index types.
+        r = rows_ref[i].astype(i.dtype)
+        zero = jnp.zeros((), i.dtype)
+        cur = pl.load(out_ref, (pl.dslice(r, 1), pl.dslice(zero, w)))
+        d = pl.load(delta_ref, (pl.dslice(i, 1), pl.dslice(zero, w)))
+        pl.store(out_ref, (pl.dslice(r, 1), pl.dslice(zero, w)), cur + d)
+        return carry
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+def scatter_add_pallas(dense: jnp.ndarray, rows: jnp.ndarray,
+                       delta: jnp.ndarray, interpret: bool = False,
+                       ) -> jnp.ndarray:
+    """Returns dense with delta[i] added into row rows[i], np.add.at order.
+
+    dense: (R, C); rows: (N,) int in [0, R] (R = no-op dummy); delta: (N, C).
+    """
+    R, C = dense.shape
+    N = rows.shape[0]
+    if N == 0 or R == 0:
+        return dense
+    dtype = dense.dtype
+    # Dedicated dummy row at index R: padding entries accumulate there and
+    # the row is sliced away on return, so real rows stay untouched.
+    dense_p = jnp.concatenate([dense, jnp.zeros((1, C), dtype)], axis=0)
+    rpad = (-(R + 1)) % SUBLANES
+    cpad = (-C) % LANES
+    dense_p = jnp.pad(dense_p, ((0, rpad), (0, cpad)))
+    delta_p = jnp.pad(delta.astype(dtype), ((0, 0), (0, cpad)))
+    rows_i = rows.astype(jnp.int32)
+    npad = (-N) % SUBLANES
+    if npad:
+        rows_i = jnp.concatenate([rows_i, jnp.full((npad,), R, jnp.int32)])
+        delta_p = jnp.pad(delta_p, ((0, npad), (0, 0)))
+    Rp, Cp, Np = R + 1 + rpad, C + cpad, N + npad
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(Cp // LANES,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((Np, LANES), lambda j: (0, j)),
+            pl.BlockSpec((Rp, LANES), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((Rp, LANES), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Cp), dtype),
+        interpret=interpret,
+    )(rows_i, delta_p, dense_p)
+    return out[:R, :C]

@@ -1,0 +1,54 @@
+"""Public PS dense-block apply op: dispatches Pallas kernel vs numpy.
+
+`scatter_add_inplace` is the runtime entry used by ServerShard._flush_updates
+when PSRuntime(ps_kernels=True).  With pallas off it is exactly the seed
+`np.add.at` path; with pallas on/interpret it routes through the kernel,
+which accumulates duplicate rows in the same submission order, so the final
+state stays bitwise equal to the simulator either way.  Shard state is f64;
+the jax path runs under enable_x64 so no precision is lost in transit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import pallas_mode
+
+
+def _jax_scatter_add(dense: np.ndarray, rows: np.ndarray,
+                     delta: np.ndarray, mode: str) -> np.ndarray:
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        if mode in ("on", "interpret"):
+            from repro.kernels.ps_apply import kernel
+            out = kernel.scatter_add_pallas(
+                jnp.asarray(dense), jnp.asarray(rows, jnp.int32),
+                jnp.asarray(delta), interpret=(mode == "interpret"))
+        else:
+            from repro.kernels.ps_apply import ref
+            out = ref.scatter_add(jnp.asarray(dense),
+                                  jnp.asarray(rows, jnp.int32),
+                                  jnp.asarray(delta))
+        return np.asarray(out)
+
+
+def scatter_add_inplace(dense: np.ndarray, rows: np.ndarray,
+                        delta: np.ndarray) -> None:
+    """Accumulate delta[i] into dense[rows[i]] in place (np.add.at order)."""
+    mode = pallas_mode()
+    if mode == "off" or rows.shape[0] == 0:
+        np.add.at(dense, rows, delta)
+        return
+    n, r = rows.shape[0], dense.shape[0]
+    # Pad N up to a power of two with no-op rows targeting the kernel's
+    # dummy row R, so jit retraces are bounded to O(log max-batch) shapes.
+    npad = max(8, 1 << (n - 1).bit_length())
+    if npad != n:
+        rows_p = np.full(npad, r, np.int32)
+        rows_p[:n] = rows
+        delta_p = np.zeros((npad, dense.shape[1]), dense.dtype)
+        delta_p[:n] = delta
+    else:
+        rows_p, delta_p = rows.astype(np.int32), delta
+    dense[...] = _jax_scatter_add(dense, rows_p, delta_p, mode)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the PS segment scatter-add apply.
+
+The shard applies a coalesced batch by `np.add.at(dense, rows, delta)`:
+duplicate rows accumulate.  `.at[...].add` is jnp's equivalent; XLA may
+reassociate duplicate-row sums, so exact-order parity is asserted against
+the Pallas kernel (which replays submission order), not against this ref.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scatter_add(dense: jnp.ndarray, rows: jnp.ndarray,
+                delta: jnp.ndarray) -> jnp.ndarray:
+    """Returns dense with delta[i] accumulated into row rows[i]."""
+    return dense.at[rows].add(delta.astype(dense.dtype))

@@ -1,0 +1,63 @@
+"""Largest-|Δ|-first selection Pallas kernel for the flush hot path.
+
+The worker flush ranks pending per-key deltas by max-|Δ| so the biggest
+updates ship first.  This kernel emits the full descending ordering via k
+rounds of argmax-and-mask: each round takes the flat argmax lane, records it
+with a one-hot iota write (no dynamic lane stores — TPU lanes can't be
+indexed dynamically), then masks that lane to -inf.  Ties resolve to the
+first occurrence, matching np.argsort(-mags, kind="stable").
+
+Layout: magnitudes live in row 0 of an (8, L) f32 tile (sublane hygiene);
+rows 1..7 and lane padding are filled below any real magnitude so the flat
+argmax always lands in row 0 and equals the lane index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SUBLANES = 8
+LANES = 128
+
+
+def _kernel(m_ref, out_ref, *, k):
+    lane = jax.lax.broadcasted_iota(jnp.int32, m_ref.shape, 1)
+
+    def body(j, carry):
+        mags, out = carry
+        idx = jnp.argmax(mags).astype(jnp.int32)  # flat == lane (row 0 wins)
+        out = jnp.where(lane == j, idx, out)
+        mags = jnp.where(lane == idx, -jnp.inf, mags)
+        return mags, out
+
+    _, out = jax.lax.fori_loop(
+        0, k, body, (m_ref[...], jnp.zeros(m_ref.shape, jnp.int32)))
+    out_ref[...] = out
+
+
+def topk_mag_pallas(mags: jnp.ndarray, k: int | None = None,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Indices of the k largest entries of mags, descending, ties stable.
+
+    mags: (n,) non-negative f32 magnitudes.  k defaults to n (full order).
+    """
+    n = mags.shape[0]
+    k = n if k is None else int(k)
+    if n == 0 or k == 0:
+        return jnp.zeros((0,), jnp.int32)
+    pad = (-n) % LANES
+    L = n + pad
+    row0 = jnp.pad(mags.astype(jnp.float32), (0, pad), constant_values=-1.0)
+    # Pad rows sit strictly below any real magnitude (>= 0), so they are
+    # only ever selected after every real lane — and k <= n forbids that.
+    m = jnp.full((SUBLANES, L), -jnp.inf, jnp.float32).at[0].set(row0)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((SUBLANES, L), jnp.int32),
+        interpret=interpret,
+    )(m)
+    return out[0, :k]

@@ -1,0 +1,28 @@
+"""Public magnitude-ordering op: dispatches Pallas kernel vs numpy.
+
+`magnitude_order` is the runtime entry used by the worker flush when
+PSRuntime(ps_kernels=True).  All paths implement the same contract —
+descending by magnitude, ties in first-occurrence order — so the flush
+ships updates in exactly the order the seed Python sort produced.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import pallas_mode
+
+
+def magnitude_order(mags: np.ndarray) -> np.ndarray:
+    """Indices ordering mags descending, ties stable; mags non-negative."""
+    mode = pallas_mode()
+    if mode == "off" or mags.shape[0] <= 1:
+        return np.argsort(-mags, kind="stable")
+    import jax.numpy as jnp
+    if mode in ("on", "interpret"):
+        from repro.kernels.topk_mag import kernel
+        out = kernel.topk_mag_pallas(jnp.asarray(mags, jnp.float32),
+                                     interpret=(mode == "interpret"))
+    else:
+        from repro.kernels.topk_mag import ref
+        out = ref.magnitude_order(jnp.asarray(mags, jnp.float32))
+    return np.asarray(out)

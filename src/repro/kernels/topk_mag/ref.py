@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for largest-|Δ|-first selection.
+
+jnp.argsort is stable by default, so sorting on -mags yields the descending
+order with ties kept in first-occurrence order — the same contract as the
+seed Python sort (`key=lambda: -max|Δ|`) and the kernel's argmax-and-mask.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def magnitude_order(mags: jnp.ndarray) -> jnp.ndarray:
+    """Indices ordering mags descending; ties stable (first occurrence)."""
+    return jnp.argsort(-mags).astype(jnp.int32)

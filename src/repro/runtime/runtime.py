@@ -175,6 +175,13 @@ class ClientProcess:
                 except BaseException as e:
                     rt._record_error(e)
             self.cond.notify_all()
+        # zero-copy discipline: every view-backed delivery was either
+        # applied above or materialized into `staged`, so drop the frame
+        # pins NOW — before the blocking ack sends below.  Holding pins
+        # across a wire write could deadlock two full rings against each
+        # other (the shard may be blocked writing into our ring, waiting
+        # for exactly this release to free its own inbound ring).
+        T.release_msgs(batch)
         # the epoch swap runs outside self.cond (it takes route_lock, and
         # cond must never be held while waiting on it) but still on the
         # comm thread, so it can never deadlock against a gated worker
@@ -203,7 +210,8 @@ class ClientProcess:
                               f"{self.pid} {err}")
         if isinstance(msg, DeliverMsg):
             if rt.barrier_reads and msg.ts >= self.cur_period():
-                self.staged.append(msg)
+                # retained past this apply cycle: copy out of the ring
+                self.staged.append(T.materialize_msg(msg))
             else:
                 self._apply_delivery(msg)
                 # acks only feed the VAP synchronized-update accounting;
@@ -222,9 +230,15 @@ class ClientProcess:
         elif isinstance(msg, EpochMsg):
             self._pending_epoch = msg         # adopted after this batch
         elif isinstance(msg, FullyDelivered):
+            # exact subtraction, mirroring the simulator's VAP accounting
+            # (core/server.py _on_deliver): the accumulator received exactly
+            # msg.delta when the update applied, so subtracting it back is
+            # exact — the old sub-1e-12 snap discarded legitimately in-flight
+            # tiny deltas (see test_runtime_conformance sub-epsilon test).
+            # The value/strong gates carry their own > 1e-12 dead zone, so
+            # float residue from *other* orderings never wedges a worker.
             acc = self.unsynced[msg.worker][msg.key]
-            res = acc[msg.rows] - msg.delta
-            acc[msg.rows] = np.where(np.abs(res) < 1e-12, 0.0, res)
+            acc[msg.rows] -= msg.delta
         elif isinstance(msg, ShardFinMsg):
             rt._on_shard_fin(msg)
         else:
@@ -321,8 +335,17 @@ class _WorkerFlowMixin:
                 upd = self.update_fn(w, clock, view, rng)
                 items = [(k, np.asarray(d, dtype=np.float64))
                          for k, d in upd.items()]
-                if self.prioritize:
-                    items.sort(key=lambda kv: -float(np.max(np.abs(kv[1]))))
+                if self.prioritize and len(items) > 1:
+                    # one magnitude pass per flush, then a stable descending
+                    # argsort (identical order to the former per-item
+                    # Python sort key, including ties) — this numpy path is
+                    # also the reference for kernels/topk_mag
+                    mags = np.fromiter(
+                        (np.abs(d).max() if d.size else 0.0
+                         for _, d in items),
+                        dtype=np.float64, count=len(items))
+                    items = [items[int(i)]
+                             for i in self._magnitude_order(mags)]
                 outbox: List[Tuple[str, np.ndarray]] = []
                 for key, delta in items:
                     d2 = self._apply_update(w, clock, proc, key, delta)
@@ -337,6 +360,14 @@ class _WorkerFlowMixin:
                 self._on_clock(w, clock, proc, outbox)
         except BaseException as e:
             self._record_error(e)
+
+    def _magnitude_order(self, mags: np.ndarray) -> np.ndarray:
+        """Largest-|Δ|-first send order (paper §4.2).  Stable on ties, so
+        the kernel and numpy paths agree with the former Python sort."""
+        if getattr(self, "ps_kernels", False):
+            from repro.kernels.topk_mag import ops as topk_ops
+            return topk_ops.magnitude_order(mags)
+        return np.argsort(-mags, kind="stable")
 
     def _flush_outbox(self, w: int, clock: int, proc: ClientProcess,
                       outbox: List[Tuple[str, np.ndarray]]) -> None:
@@ -507,7 +538,9 @@ class PSRuntime(_WorkerFlowMixin):
                  snapshot_every: int = 0,
                  snapshot_dir: Optional[str] = None,
                  max_shards: Optional[int] = None,
-                 membership_plan: Optional[MembershipPlan] = None):
+                 membership_plan: Optional[MembershipPlan] = None,
+                 zero_copy: Optional[bool] = None,
+                 ps_kernels: bool = False):
         if n_workers % threads_per_process:
             raise ValueError("n_workers must divide into processes evenly")
         if n_shards < 1:
@@ -537,6 +570,13 @@ class PSRuntime(_WorkerFlowMixin):
         self.prioritize = prioritize_by_magnitude
         self.check = check_invariants
         self.barrier_reads = barrier_reads
+        # zero_copy: raw RowCodec frames + in-ring view decode on the shm
+        # transport (None -> on; other transports ignore it).  ps_kernels:
+        # route the dense-block apply and the magnitude ordering through
+        # repro.kernels.{ps_apply,topk_mag} (numpy dispatch when Pallas is
+        # off, so flipping the flag on a CPU host changes nothing bitwise).
+        self.zero_copy = True if zero_copy is None else bool(zero_copy)
+        self.ps_kernels = bool(ps_kernels)
 
         # canonical (R, C) float64 master shapes; original shapes for reads
         self._shapes: Dict[str, Tuple[int, ...]] = {}
@@ -728,16 +768,35 @@ class PSRuntime(_WorkerFlowMixin):
                     on_reader_error))
         else:
             self._reader_stop = threading.Event()
+            codec = T.RowCodec(list(self._x0.keys())) if self.zero_copy \
+                else None
             for (p, s), edge in self._transport.edges.items():
-                self._chan_sp[s][p] = T.WireChannel(
-                    f"s{s}->p{p}",
-                    T.ring_writer(edge.s2c, edge.s2c_bell[1], self._deadline),
-                    max_frame=self._shm_max_frame)
-                self._readers.append(T.start_reader(
-                    f"rx-p{p}s{s}",
-                    T.ring_reader(edge.c2s, edge.c2s_bell[0],
-                                  self._reader_stop),
-                    self.shards[s].inbox, on_reader_error))
+                if codec is not None:
+                    # zero-copy wire: raw row-block frames, one doorbell per
+                    # flush (on_flush) instead of one per frame, and an
+                    # in-ring view reader on the receive side
+                    bell_w = edge.s2c_bell[1]
+                    self._chan_sp[s][p] = T.WireChannel(
+                        f"s{s}->p{p}",
+                        T.ring_parts_writer(edge.s2c, self._deadline),
+                        max_frame=self._shm_max_frame, codec=codec,
+                        on_flush=lambda w=bell_w: T.ShmEdge.ring_bell(w))
+                    self._readers.append(T.start_view_reader(
+                        f"rx-p{p}s{s}",
+                        T.RingViewReader(edge.c2s, codec, edge.c2s_bell[0],
+                                         self._reader_stop),
+                        self.shards[s].inbox, on_reader_error))
+                else:
+                    self._chan_sp[s][p] = T.WireChannel(
+                        f"s{s}->p{p}",
+                        T.ring_writer(edge.s2c, edge.s2c_bell[1],
+                                      self._deadline),
+                        max_frame=self._shm_max_frame)
+                    self._readers.append(T.start_reader(
+                        f"rx-p{p}s{s}",
+                        T.ring_reader(edge.c2s, edge.c2s_bell[0],
+                                      self._reader_stop),
+                        self.shards[s].inbox, on_reader_error))
         for s in self.shards:
             s.thread.start()
 
@@ -1063,6 +1122,9 @@ class _ClientHost(_WorkerFlowMixin):
         self.check = rt.check
         self.barrier_reads = rt.barrier_reads
         self.prioritize = rt.prioritize
+        # forked children stay numpy-only (importing jax after fork is not
+        # fork-safe); the kernel paths run in the parent and in queue mode
+        self.ps_kernels = False
         self.n_shards = rt.n_shards
         self.n_slots = rt.n_slots
         self.n_proc = rt.n_proc
@@ -1101,18 +1163,33 @@ class _ClientHost(_WorkerFlowMixin):
                     self._record_error))
         else:
             self._stop = threading.Event()
+            codec = T.RowCodec(list(self._x0.keys())) if rt.zero_copy \
+                else None
             chans = []
             for s in range(rt.n_slots):
                 edge = rt._transport.edges[(pid, s)]
-                chans.append(T.WireChannel(
-                    f"p{pid}->s{s}",
-                    T.ring_writer(edge.c2s, edge.c2s_bell[1],
-                                  self._deadline),
-                    max_frame=rt._shm_max_frame))
-                self._readers.append(T.start_reader(
-                    f"rx-s{s}", T.ring_reader(edge.s2c, edge.s2c_bell[0],
-                                              self._stop),
-                    self.proc.inbox, self._record_error))
+                if codec is not None:
+                    bell_w = edge.c2s_bell[1]
+                    chans.append(T.WireChannel(
+                        f"p{pid}->s{s}",
+                        T.ring_parts_writer(edge.c2s, self._deadline),
+                        max_frame=rt._shm_max_frame, codec=codec,
+                        on_flush=lambda w=bell_w: T.ShmEdge.ring_bell(w)))
+                    self._readers.append(T.start_view_reader(
+                        f"rx-s{s}",
+                        T.RingViewReader(edge.s2c, codec, edge.s2c_bell[0],
+                                         self._stop),
+                        self.proc.inbox, self._record_error))
+                else:
+                    chans.append(T.WireChannel(
+                        f"p{pid}->s{s}",
+                        T.ring_writer(edge.c2s, edge.c2s_bell[1],
+                                      self._deadline),
+                        max_frame=rt._shm_max_frame))
+                    self._readers.append(T.start_reader(
+                        f"rx-s{s}", T.ring_reader(edge.s2c, edge.s2c_bell[0],
+                                                  self._stop),
+                        self.proc.inbox, self._record_error))
         self._channels = chans
         self._chan_ps = {pid: chans}
 

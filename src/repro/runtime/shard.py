@@ -82,7 +82,7 @@ from repro.runtime.messages import (SHUTDOWN, AckBatchMsg, AckMsg, Channel,
                                     ReplicaFinMsg, ReplicaStateMsg, ReplicaVcMsg,
                                     ShardFinMsg, SubscribeMsg, UnsubscribeMsg,
                                     UpdateMsg, group_by_channel, pump_inbox)
-from repro.runtime.transport import FifoAssert
+from repro.runtime.transport import FifoAssert, materialize_msg, release_msgs
 
 _BATCH = 256        # max messages coalesced per apply/dispatch cycle
 
@@ -162,7 +162,9 @@ class ServerShard:
                             rt._violation(f"FIFO violation: proc {sender}->"
                                           f"shard {self.sid} {err}")
                 if self._should_hold(msg):
-                    self._held.append(msg)
+                    # held past this cycle (replayed at install): copy any
+                    # ring-backed arrays out before the frame pin drops
+                    self._held.append(materialize_msg(msg))
                     held += 1
                     continue
                 if isinstance(msg, UpdateMsg):
@@ -180,6 +182,13 @@ class ServerShard:
             self._flush_publish()
         except BaseException as e:
             rt._record_error(e)
+        # zero-copy discipline: every view consumed by the applies above is
+        # done with, and everything retained (held/queued/pending/publish/
+        # outbox) was materialized — release the frame pins BEFORE the
+        # blocking outbox writes.  Blocking on a full s->c ring while still
+        # pinning the c->s ring would let two full rings deadlock each
+        # other (the client comm thread observes the mirror-image rule).
+        release_msgs(batch)
         self._flush_outbox()
         # in-flight decrements must come *after* the sends this batch caused
         # were enqueued (incrementing the counter), else the quiesce wait can
@@ -357,18 +366,28 @@ class ServerShard:
             self.applied_parts[msg.process] += 1
         with self.lock:
             A = self.part.A
+            use_kernels = getattr(rt, "ps_kernels", False)
             for key, msgs in by_key.items():
                 dense = self.dense[key]
                 if len(msgs) == 1:
                     m = msgs[0]
+                    if self.subscribers:
+                        # the publish entry below retains m's arrays past
+                        # this cycle: copy them out of the ring first
+                        materialize_msg(m)
                     # rows are unique within one part: plain fancy-index add
                     dense[m.rows // A] += m.delta
                     rows, delta = m.rows, m.delta
                 else:
                     rows = np.concatenate([m.rows for m in msgs])
                     delta = np.concatenate([m.delta for m in msgs])
-                    # rows may repeat across parts: np.add.at accumulates
-                    np.add.at(dense, rows // A, delta)
+                    # rows may repeat across parts: the scatter-add must
+                    # accumulate duplicates sequentially (np.add.at order)
+                    if use_kernels:
+                        from repro.kernels.ps_apply import ops as apply_ops
+                        apply_ops.scatter_add_inplace(dense, rows // A, delta)
+                    else:
+                        np.add.at(dense, rows // A, delta)
                 # serving: one coalesced delta per key per cycle per replica
                 # (global row ids; the arrays are shared — receivers only read)
                 for rid in self.subscribers:
@@ -383,18 +402,24 @@ class ServerShard:
         if rt.n_proc == 1:
             # no peers to propagate to: the update is synchronized already
             if rt.policy.value_bounded:
+                # the echo rides the outbox, flushed after the pin release
+                materialize_msg(msg)
                 self._send(rt._chan_sp[self.sid][msg.process],
                            FullyDelivered(msg.uid, msg.worker, msg.key,
                                           msg.rows, msg.delta, self.sid))
             return
         if self.queued[msg.key] or not controller.strong_delivery_gate(
                 rt.policy, self.halfsync[msg.key][msg.rows], msg.delta):
-            self.queued[msg.key].append(msg)
+            self.queued[msg.key].append(materialize_msg(msg))
             return
         self._start_delivery(msg)
 
     def _start_delivery(self, msg: UpdateMsg) -> None:
         rt = self.rt
+        # the fan-out DeliverMsgs (and the VAP pending entry) outlive this
+        # apply cycle's frame pins — the dense apply already consumed the
+        # view in place, so this copy is the delivery path's only one
+        materialize_msg(msg)
         track = rt.policy.value_bounded   # ack cycle feeds VAP accounting only
         if track:
             hs = self.halfsync[msg.key]
@@ -426,9 +451,12 @@ class ServerShard:
             self.pending[uid] = (msg, remaining)
             return
         del self.pending[uid]
+        # exact subtraction (see runtime.py FullyDelivered): |delta| was
+        # added to halfsync verbatim at _start_delivery, so the inverse is
+        # exact; the strong gate's own > 1e-12 dead zone absorbs residue
+        # left by other interleavings
         hs = self.halfsync[msg.key]
-        res = hs[msg.rows] - np.abs(msg.delta)
-        hs[msg.rows] = np.where(np.abs(res) < 1e-12, 0.0, res)
+        hs[msg.rows] -= np.abs(msg.delta)
         if rt.policy.value_bounded:
             # the synchronized-update echo only feeds the VAP unsynced
             # accounting; for clock-only policies it is pure overhead (and

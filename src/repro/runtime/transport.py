@@ -11,17 +11,36 @@ interface the threaded runtime already uses (``messages.Channel``):
     memory byte rings (two rings per client<->shard pair, one per
     direction) for same-host deployments.
 
-Framing.  A frame is ``u32 payload_len | payload`` where the payload is::
+Framing.  A frame is ``u32 payload_len | payload``.  Two payload formats
+share the stream, discriminated by the payload's first u32:
 
-    u32 n_buffers | u32 head_len | head | (u64 buf_len | buf) * n_buffers
+* **pickle-5** (tcp, control messages, serving)::
 
-``head`` is ``pickle.dumps(msgs, protocol=5, buffer_callback=...)`` of a
-*list* of messages, so senders coalesce many row updates into one frame
-(``Channel.send_many``) and the arrays inside ``UpdateMsg``/``DeliverMsg``
-travel as raw contiguous buffers after the pickle head instead of being
-copied through the pickler.  ``payload_len == EOF_LEN`` is the end-of-stream
-sentinel.  :class:`FrameDecoder` is incremental: feed it arbitrary byte
-chunks (short reads, split frames) and it yields complete messages only.
+      u32 n_buffers | u32 head_len | head | (u64 buf_len | buf) * n_buffers
+
+  ``head`` is ``pickle.dumps(msgs, protocol=5, buffer_callback=...)`` of a
+  *list* of messages, so senders coalesce many row updates into one frame
+  (``Channel.send_many``) and the arrays inside ``UpdateMsg``/``DeliverMsg``
+  travel as raw contiguous buffers after the pickle head instead of being
+  copied through the pickler.
+
+* **raw row blocks** (shm data plane, :class:`RowCodec`)::
+
+      u32 RAW_MAGIC | u32 n_msgs | n_msgs * (hdr | rows int64 | delta f64)
+
+  ``hdr`` is the fixed 48-byte struct ``_RAW_HDR`` (msg kind, dtype code,
+  interned key id, uid/seq, worker/process/ts/shard/epoch, row and column
+  counts).  ``RAW_MAGIC`` can never collide with a sane pickle payload's
+  ``n_buffers``.  Only ``UpdateMsg``/``DeliverMsg`` are raw-eligible; a
+  batch mixing in control messages is split into consecutive raw/pickle
+  frames under the channel lock, preserving FIFO.  On the read side,
+  :class:`RingViewReader` decodes the arrays as numpy views *into the ring*
+  (zero-copy) and defers the ring's head cursor until the consumer releases
+  the frame — see its docstring for the pin/release discipline.
+
+``payload_len == EOF_LEN`` is the end-of-stream sentinel.
+:class:`FrameDecoder` is incremental: feed it arbitrary byte chunks (short
+reads, split frames) and it yields complete messages only.
 
 FIFO.  Channels stamp per-channel sequence numbers under a lock exactly like
 the in-process queues; receivers assert contiguity via :class:`FifoAssert`,
@@ -49,14 +68,28 @@ import socket
 import struct
 import threading
 import time
+from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 from multiprocessing import shared_memory
+
+import numpy as np
+
+from repro.runtime.messages import DeliverMsg, UpdateMsg
 
 _U32 = struct.Struct("<I")
 _U64 = struct.Struct("<Q")
 EOF_LEN = 0xFFFFFFFF          # length-prefix value signalling end-of-stream
 MAX_FRAME = EOF_LEN - 1
+
+# raw row-block payloads (zero-copy shm data plane) -------------------------
+RAW_MAGIC = 0x46574152        # b"RAWF" little-endian; impossible n_buffers
+K_UPDATE = 1                  # raw msg kinds
+K_DELIVER = 2
+DT_F64 = 0                    # delta dtype codes (rows are always int64)
+# kind u8 | dtype u8 | key id u16 | uid i64 | seq i64 |
+# worker, process, ts, shard, epoch, n_rows, n_cols i32  -> 48 bytes
+_RAW_HDR = struct.Struct("<BBHqqiiiiiii")
 
 EOF = object()                # yielded by FrameDecoder when the peer closed
 
@@ -183,6 +216,335 @@ class FifoAssert:
 
 
 # ---------------------------------------------------------------------------
+# raw row-block codec (zero-copy shm data plane)
+# ---------------------------------------------------------------------------
+
+
+class RowCodec:
+    """Encode/decode ``UpdateMsg``/``DeliverMsg`` as fixed-header raw frames.
+
+    Key names are interned to u16 ids against a fixed, order-stable key list
+    (``list(x0.keys())`` — identical in parent and forked children, so both
+    sides agree on the table without a handshake).  Messages that are not
+    raw-eligible (control messages, unknown keys, exotic dtypes) fall back
+    to pickle-5 frames on the same stream; :meth:`frames` splits a mixed
+    batch into consecutive raw/pickle frames so FIFO order is preserved.
+
+    Encoding is zero-copy on the producer side too: :meth:`frames` yields
+    *lists of buffers* (length prefix, fixed headers, and the messages' own
+    array memoryviews) that :meth:`ShmRing.write_parts` copies straight into
+    the ring — no intermediate ``b"".join`` of the row data.
+    """
+
+    def __init__(self, keys):
+        self._keys = list(keys)
+        if len(self._keys) > 0xFFFF:
+            raise ValueError("RowCodec supports at most 65535 keys")
+        self._key_id = {k: i for i, k in enumerate(self._keys)}
+
+    # ------------------------------------------------------------- encode
+    def _raw_ok(self, m) -> bool:
+        t = type(m)
+        if t is not UpdateMsg and t is not DeliverMsg:
+            return False
+        return (m.key in self._key_id
+                and isinstance(m.rows, np.ndarray)
+                and isinstance(m.delta, np.ndarray)
+                and m.rows.dtype == np.int64
+                and m.delta.dtype == np.float64
+                and m.delta.ndim == 2)
+
+    def _pack_raw(self, msgs: list) -> list:
+        """One raw frame as a list of buffers (length prefix first)."""
+        parts: list = [b"", _U32.pack(RAW_MAGIC), _U32.pack(len(msgs))]
+        total = 8
+        for m in msgs:
+            rows = np.ascontiguousarray(m.rows)
+            delta = np.ascontiguousarray(m.delta)
+            kind = K_UPDATE if type(m) is UpdateMsg else K_DELIVER
+            hdr = _RAW_HDR.pack(
+                kind, DT_F64, self._key_id[m.key], m.uid, m.seq,
+                m.worker, m.process, m.ts, getattr(m, "shard", 0),
+                getattr(m, "epoch", 0), rows.shape[0], delta.shape[1])
+            parts.append(hdr)
+            parts.append(memoryview(rows).cast("B"))
+            parts.append(memoryview(delta).cast("B"))
+            total += _RAW_HDR.size + rows.nbytes + delta.nbytes
+        if total > MAX_FRAME:
+            raise ValueError(f"frame too large: {total} bytes")
+        parts[0] = _U32.pack(total)
+        return parts
+
+    def raw_size(self, m) -> int:
+        return _RAW_HDR.size + m.rows.nbytes + m.delta.nbytes
+
+    def frames(self, msgs: list, max_frame: Optional[int]):
+        """Split a batch into wire items, each either a raw frame (list of
+        buffers) or a pickle frame (bytes), in batch order."""
+        cap = (max_frame if max_frame is not None else MAX_FRAME) - 4
+        out: list = []
+        i, n = 0, len(msgs)
+        while i < n:
+            if self._raw_ok(msgs[i]):
+                cur, cur_bytes = [], 8
+                while i < n and self._raw_ok(msgs[i]):
+                    sz = self.raw_size(msgs[i])
+                    if cur and cur_bytes + sz > cap:
+                        out.append(self._pack_raw(cur))
+                        cur, cur_bytes = [], 8
+                    cur.append(msgs[i])
+                    cur_bytes += sz
+                    i += 1
+                if cur:
+                    out.append(self._pack_raw(cur))
+            else:
+                j = i
+                while j < n and not self._raw_ok(msgs[j]):
+                    j += 1
+                self._pickle_frames(msgs[i:j], max_frame, out)
+                i = j
+        return out
+
+    def _pickle_frames(self, msgs: list, max_frame: Optional[int],
+                       out: list) -> None:
+        frame = encode_frame(msgs)
+        if (max_frame is not None and len(frame) > max_frame
+                and len(msgs) > 1):
+            mid = len(msgs) // 2
+            self._pickle_frames(msgs[:mid], max_frame, out)
+            self._pickle_frames(msgs[mid:], max_frame, out)
+        else:
+            out.append(frame)
+
+    # ------------------------------------------------------------- decode
+    def decode_raw(self, mv) -> list:
+        """Inverse of :meth:`_pack_raw` over a payload memoryview.  The
+        returned messages' ``rows``/``delta`` are numpy views *into* ``mv``
+        — zero-copy when ``mv`` maps ring memory (the caller then pins the
+        frame until every message is released)."""
+        n_msgs = _U32.unpack_from(mv, 4)[0]
+        off = 8
+        msgs = []
+        for _ in range(n_msgs):
+            (kind, dt, kid, uid, seq, worker, process, ts, shard, epoch,
+             n_rows, n_cols) = _RAW_HDR.unpack_from(mv, off)
+            off += _RAW_HDR.size
+            if dt != DT_F64:
+                raise ValueError(f"unknown raw dtype code {dt}")
+            rows = np.frombuffer(mv, dtype=np.int64, count=n_rows,
+                                 offset=off)
+            off += n_rows * 8
+            delta = np.frombuffer(mv, dtype=np.float64, count=n_rows * n_cols,
+                                  offset=off).reshape(n_rows, n_cols)
+            off += n_rows * n_cols * 8
+            key = self._keys[kid]
+            if kind == K_UPDATE:
+                m = UpdateMsg(uid, worker, process, ts, key, rows, delta,
+                              epoch, seq)
+            elif kind == K_DELIVER:
+                m = DeliverMsg(uid, worker, process, shard, ts, key, rows,
+                               delta, seq)
+            else:
+                raise ValueError(f"unknown raw message kind {kind}")
+            msgs.append(m)
+        if off != mv.nbytes:
+            raise ValueError(
+                f"raw frame overrun: {mv.nbytes - off} trailing bytes")
+        return msgs
+
+
+class FrameHandle:
+    """Pin on one decoded-in-place raw frame: the ring's head cursor may not
+    pass this frame until every message decoded from it is released."""
+
+    __slots__ = ("_reader", "start", "end", "_remaining", "released")
+
+    def __init__(self, reader: "RingViewReader", start: int, end: int,
+                 count: int):
+        self._reader = reader
+        self.start = start            # absolute stream offset of the frame
+        self.end = end                # absolute offset one past the payload
+        self._remaining = count
+        self.released = False
+
+    def release_one(self) -> None:
+        r = self._reader
+        with r._lock:
+            self._remaining -= 1
+            if self._remaining <= 0 and not self.released:
+                self.released = True
+                r._advance_locked()
+
+
+def release_msg(msg) -> None:
+    """Drop a message's pin on its source frame (no-op for owned msgs)."""
+    h = getattr(msg, "_frame", None)
+    if h is not None:
+        msg._frame = None
+        h.release_one()
+
+
+def release_msgs(msgs) -> None:
+    for m in msgs:
+        release_msg(m)
+
+
+def materialize_msg(msg):
+    """Copy a view-backed message's arrays out of the ring and release its
+    pin, in place.  Required before *retaining* a message (or its arrays)
+    past the apply cycle that received it — once the pin drops and the read
+    cursor advances, the producer may overwrite the backing ring bytes."""
+    h = getattr(msg, "_frame", None)
+    if h is not None:
+        msg.rows = np.array(msg.rows)
+        msg.delta = np.array(msg.delta)
+        msg._frame = None
+        h.release_one()
+    return msg
+
+
+class RingViewReader:
+    """Zero-copy consumer side of a :class:`ShmRing` carrying RowCodec frames.
+
+    Owns the ring's read side entirely: a *decode* cursor (``_pos``) runs
+    ahead of the shared *head* cursor, which only advances past the longest
+    prefix of frames whose messages have all been released.  Raw frames
+    that lie contiguous in the ring decode as numpy views into ring memory
+    (pinned via :class:`FrameHandle`); frames straddling the wrap point —
+    and all pickle frames — are copied out and decode as owned messages
+    (no pin, head free to advance).
+
+    Discipline for consumers: every decoded message must be either
+    *released* (:func:`release_msg`, after its arrays were fully consumed
+    this apply cycle) or *materialized* (:func:`materialize_msg`, before
+    being retained), and a consumer must never block on a wire write while
+    holding unreleased pins — the producer could be waiting on this very
+    ring's free space (see ``shard._handle_batch`` ordering).
+    """
+
+    def __init__(self, ring: "ShmRing", codec: RowCodec, bell_r: int,
+                 stop: threading.Event):
+        self.ring = ring
+        self.codec = codec
+        self.bell_r = bell_r
+        self.stop = stop
+        self.closed = False
+        self._pos = 0          # absolute decode cursor
+        self._released = 0     # absolute head we last published
+        self._pending: deque = deque()   # pinned FrameHandles, stream order
+        self._lock = threading.Lock()
+
+    # head may only advance to the start of the first still-pinned frame
+    # (or all the way to the decode cursor when nothing is pinned)
+    def _advance_locked(self) -> None:
+        while self._pending and self._pending[0].released:
+            self._pending.popleft()
+        new_head = self._pending[0].start if self._pending else self._pos
+        if new_head > self._released:
+            self._released = new_head
+            self.ring._set_head(new_head)
+
+    def pinned_frames(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    def _copy_out(self, pos: int, n: int) -> bytes:
+        cap = self.ring.capacity
+        off = pos % cap
+        first = min(n, cap - off)
+        base = ShmRing.HDR
+        out = bytes(self.ring.buf[base + off:base + off + first])
+        if first < n:
+            out += bytes(self.ring.buf[base:base + n - first])
+        return out
+
+    def _decode_ready(self) -> list:
+        out: list = []
+        cap = self.ring.capacity
+        while not self.closed:
+            tail = self.ring._tail()
+            # validate the cross-process cursor read exactly like
+            # ShmRing.read_available: a stale/torn value must never reach
+            # the arithmetic below (it would replay or overrun the stream)
+            if tail < self._pos or tail - self._released > cap:
+                break
+            if tail - self._pos < 4:
+                break
+            plen = _U32.unpack(self._copy_out(self._pos, 4))[0]
+            if plen == EOF_LEN:
+                self.closed = True
+                with self._lock:
+                    self._pos += 4
+                    self._advance_locked()
+                break
+            if tail - self._pos < 4 + plen:
+                break               # defensive: frames publish atomically
+            start = self._pos
+            body = start + 4
+            end = body + plen
+            off = body % cap
+            pinned = off + plen <= cap      # contiguous span in the ring
+            if pinned:
+                base = ShmRing.HDR
+                mv = self.ring.buf[base + off:base + off + plen]
+            else:                           # straddles the wrap: copy out
+                mv = memoryview(self._copy_out(body, plen))
+            if plen >= 8 and _U32.unpack_from(mv, 0)[0] == RAW_MAGIC:
+                msgs = self.codec.decode_raw(mv)
+                with self._lock:
+                    if pinned and msgs:
+                        h = FrameHandle(self, start, end, len(msgs))
+                        for m in msgs:
+                            m._frame = h
+                        self._pending.append(h)
+                    self._pos = end
+                    self._advance_locked()
+            else:
+                msgs = decode_payload(bytes(mv))    # owned: copy, no pin
+                with self._lock:
+                    self._pos = end
+                    self._advance_locked()
+            out.extend(msgs)
+        return out
+
+    def read_msgs(self) -> Optional[list]:
+        """Block until at least one message is decodable; None on EOF/stop."""
+        while True:
+            msgs = self._decode_ready()
+            if msgs:
+                return msgs
+            if self.closed or self.stop.is_set():
+                return None
+            try:
+                os.read(self.bell_r, 1 << 16)   # park until the bell rings
+            except OSError:
+                return None                     # bell closed: teardown
+
+
+def view_reader_loop(reader: RingViewReader, inbox: queue.Queue,
+                     on_error: Callable[[BaseException], None]) -> None:
+    try:
+        while True:
+            msgs = reader.read_msgs()
+            if msgs is None:
+                return
+            for m in msgs:
+                inbox.put(m)
+    except BaseException as e:      # surfaced into RunStats by the runtime
+        on_error(e)
+
+
+def start_view_reader(name: str, reader: RingViewReader, inbox: queue.Queue,
+                      on_error: Callable[[BaseException], None],
+                      ) -> threading.Thread:
+    t = threading.Thread(target=view_reader_loop,
+                         args=(reader, inbox, on_error),
+                         name=name, daemon=True)
+    t.start()
+    return t
+
+
+# ---------------------------------------------------------------------------
 # wire-backed channels
 # ---------------------------------------------------------------------------
 
@@ -199,7 +561,9 @@ class WireChannel:
     def __init__(self, name: str, write: Callable[[bytes], None],
                  max_frame: Optional[int] = None,
                  try_write: Optional[Callable[[bytes], bool]] = None,
-                 room: Optional[Callable[[], int]] = None):
+                 room: Optional[Callable[[], int]] = None,
+                 codec: Optional[RowCodec] = None,
+                 on_flush: Optional[Callable[[], None]] = None):
         self.name = name
         self._write = write
         self._max_frame = max_frame    # soft cap: split batches above this
@@ -207,6 +571,9 @@ class WireChannel:
         self._room = room              # cheap free-space probe, if the sink
         self._seq = 0                  # can tell (shm rings can)
         self._lock = threading.Lock()
+        self._codec = codec            # raw row-block encoding (zero-copy)
+        self._on_flush = on_flush      # rung once per send_many, not per
+                                       # frame (batched doorbell wakes)
 
     def send(self, msg) -> None:
         self.send_many([msg])
@@ -219,6 +586,8 @@ class WireChannel:
                 m.seq = self._seq
                 self._seq += 1
             self._write_frames(msgs)
+            if self._on_flush is not None:
+                self._on_flush()
 
     # -------------------------------------------------- non-blocking sends
     @property
@@ -255,6 +624,10 @@ class WireChannel:
         bounded wire like a shm ring cannot take arbitrarily large frames;
         a single oversized message still goes out whole — size the ring for
         the largest single row part)."""
+        if self._codec is not None:
+            for item in self._codec.frames(msgs, self._max_frame):
+                self._write(item)
+            return
         frame = encode_frame(msgs)
         if (self._max_frame is not None and len(frame) > self._max_frame
                 and len(msgs) > 1):
@@ -267,6 +640,8 @@ class WireChannel:
     def close(self) -> None:
         try:
             self._write(eof_frame())
+            if self._on_flush is not None:
+                self._on_flush()    # wake the reader so it sees the EOF
         except (OSError, ValueError, RuntimeError):
             pass    # peer gone / ring full past deadline; EOF is best-effort
 
@@ -305,6 +680,20 @@ class TcpConn:
         # inbound deliveries); never let a connect/accept timeout linger
         # and poison recv() mid-run
         sock.settimeout(None)
+        # probe the queued-bytes ioctl ONCE at connection setup and cache
+        # SO_SNDBUF — room() sits on the per-flush try_write hot path, and
+        # re-importing fcntl/termios plus a getsockopt per call costs more
+        # than the probe it guards
+        self._sndbuf = sock.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
+        try:
+            import fcntl
+            import termios
+            fcntl.ioctl(sock, termios.TIOCOUTQ, b"\0" * 4)
+            self._ioctl = fcntl.ioctl
+            self._tiocoutq = termios.TIOCOUTQ
+        except (OSError, ImportError, AttributeError):
+            self._ioctl = None
+            self._tiocoutq = 0
 
     def write(self, data: bytes) -> None:
         self.sock.sendall(data)
@@ -314,16 +703,14 @@ class TcpConn:
         SO_SNDBUF minus unsent queued bytes).  Where the ioctl is
         unavailable, falls back to 'unknown' (a large number) and
         :meth:`try_write` degrades to a select()-writability probe."""
-        try:
-            import fcntl
-            import termios
-            queued = struct.unpack(
-                "i", fcntl.ioctl(self.sock, termios.TIOCOUTQ, b"\0" * 4))[0]
-            sndbuf = self.sock.getsockopt(socket.SOL_SOCKET,
-                                          socket.SO_SNDBUF)
-            return max(0, sndbuf - queued)
-        except (OSError, ImportError, AttributeError):
+        if self._ioctl is None:
             return 1 << 62
+        try:
+            queued = struct.unpack(
+                "i", self._ioctl(self.sock, self._tiocoutq, b"\0" * 4))[0]
+        except OSError:
+            return 1 << 62
+        return max(0, self._sndbuf - queued)
 
     def try_write(self, data: bytes) -> bool:
         """Non-blocking write: refuse unless the whole frame fits in the
@@ -529,6 +916,49 @@ class ShmRing:
         self._set_tail(tail + n)
         return True
 
+    def try_write_parts(self, parts: list, total: int) -> bool:
+        """Publish a multi-part frame iff it fits right now.  Each part is a
+        bytes-like buffer (the RowCodec's fixed headers and the messages'
+        own array memoryviews); copying them into the ring one by one is
+        the producer's single copy — no intermediate join."""
+        if total > self.capacity:
+            raise ValueError(
+                f"frame of {total} bytes exceeds ring capacity "
+                f"{self.capacity}")
+        if self.free_bytes() < total:
+            return False
+        tail = self._tail()
+        pos = tail % self.capacity
+        for part in parts:
+            mv = part if isinstance(part, memoryview) else memoryview(part)
+            n = mv.nbytes
+            first = min(n, self.capacity - pos)
+            off = self.HDR + pos
+            self.buf[off:off + first] = mv[:first]
+            if first < n:                   # wrap around to the start
+                self.buf[self.HDR:self.HDR + n - first] = mv[first:]
+            pos = (pos + n) % self.capacity
+        self._set_tail(tail + total)
+        return True
+
+    def write_parts(self, parts: list, deadline: float = float("inf"),
+                    abort: Optional[Callable[[], bool]] = None) -> None:
+        """Blocking counterpart of :meth:`try_write_parts`."""
+        mvs, total = [], 0
+        for p in parts:
+            mv = p if isinstance(p, memoryview) else memoryview(p)
+            mvs.append(mv)
+            total += mv.nbytes
+        spins = 0
+        while not self.try_write_parts(mvs, total):
+            spins += 1
+            if spins > 100:
+                if time.monotonic() > deadline:
+                    raise RuntimeError("shm ring write timed out (peer stuck)")
+                if abort is not None and abort():
+                    raise RuntimeError("shm ring write aborted")
+                time.sleep(2e-4)
+
     # consumer -------------------------------------------------------------
     def read_available(self) -> bytes:
         """Drain and return whatever bytes are currently published.
@@ -555,7 +985,14 @@ class ShmRing:
 
     def close(self) -> None:
         self.buf = None
-        self.shm.close()
+        try:
+            self.shm.close()
+        except BufferError:
+            # a zero-copy numpy view into the segment is still referenced
+            # somewhere (e.g. a message abandoned by an aborted run); the
+            # mapping is reclaimed at process exit, and unlink() below
+            # works regardless
+            pass
 
     def unlink(self) -> None:
         try:
@@ -627,6 +1064,21 @@ def ring_writer(ring: ShmRing, bell_w: int,
     def write(data: bytes) -> None:
         ring.write(data, deadline)
         ShmEdge.ring_bell(bell_w)
+    return write
+
+
+def ring_parts_writer(ring: ShmRing, deadline: float = float("inf"),
+                      abort: Optional[Callable[[], bool]] = None,
+                      ) -> Callable[[object], None]:
+    """Byte sink for a zero-copy :class:`WireChannel`: accepts either a
+    plain bytes frame (EOF sentinel, pickle fallback) or a RowCodec list of
+    buffers, and does NOT ring the doorbell — the channel's ``on_flush``
+    rings it once per send_many instead of once per frame."""
+    def write(item) -> None:
+        if isinstance(item, (bytes, bytearray, memoryview)):
+            ring.write(item, deadline, abort)
+        else:
+            ring.write_parts(item, deadline, abort)
     return write
 
 

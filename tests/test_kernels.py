@@ -199,3 +199,119 @@ def test_vap_accum_tree():
     p2, d2, m = vap_accum_tree(tree, delta, upd)
     assert float(m) == 0.5
     np.testing.assert_allclose(np.asarray(p2["a"]), 1.5)
+
+
+# ---------------------------------------------------------------------------
+# ps apply (segment scatter-add)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.ps_apply import kernel as pk          # noqa: E402
+from repro.kernels.ps_apply import ref as pr             # noqa: E402
+from repro.kernels.topk_mag import kernel as tk          # noqa: E402
+from repro.kernels.topk_mag import ref as tr             # noqa: E402
+
+PS_APPLY_CASES = [
+    # R, C, N — incl. duplicates-heavy, single row, wide block, big batch
+    (13, 5, 27),
+    (1, 1, 16),
+    (8, 128, 8),
+    (200, 3, 500),
+    (17, 130, 64),    # C > one lane tile
+]
+
+
+@pytest.mark.parametrize("case", PS_APPLY_CASES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_ps_apply_scatter_add(case, dtype):
+    """Kernel must be BITWISE equal to np.add.at (same accumulation order)."""
+    from jax.experimental import enable_x64
+    import contextlib
+    R, C, N = case
+    ctx = enable_x64() if dtype == np.float64 else contextlib.nullcontext()
+    with ctx:
+        dense = RNG.normal(0, 1, (R, C)).astype(dtype)
+        rows = RNG.integers(0, R, N).astype(np.int32)
+        delta = RNG.normal(0, 1, (N, C)).astype(dtype)
+        want = dense.copy()
+        np.add.at(want, rows, delta)
+        got = np.asarray(pk.scatter_add_pallas(
+            jnp.asarray(dense), jnp.asarray(rows), jnp.asarray(delta),
+            interpret=True))
+        assert got.dtype == want.dtype
+        assert np.array_equal(got, want)
+
+
+def test_ps_apply_dummy_row_is_noop():
+    """Sentinel index R routes padding to the dummy row, not real state."""
+    R, C = 6, 4
+    dense = np.asarray(RNG.normal(0, 1, (R, C)), np.float32)
+    rows = np.array([0, R, 5, R], np.int32)
+    delta = np.ones((4, C), np.float32)
+    want = dense.copy()
+    want[0] += 1
+    want[5] += 1
+    got = np.asarray(pk.scatter_add_pallas(
+        jnp.asarray(dense), jnp.asarray(rows), jnp.asarray(delta),
+        interpret=True))
+    assert np.array_equal(got, want)
+
+
+def test_ps_apply_ref_duplicates():
+    """jnp ref accumulates duplicates like np.add.at (integer-exact)."""
+    dense = jnp.zeros((5, 3), jnp.float32)
+    rows = jnp.asarray([1, 1, 1, 4], jnp.int32)
+    delta = jnp.ones((4, 3), jnp.float32)
+    out = np.asarray(pr.scatter_add(dense, rows, delta))
+    assert np.array_equal(out[1], [3, 3, 3])
+    assert np.array_equal(out[4], [1, 1, 1])
+    assert np.array_equal(out[0], [0, 0, 0])
+
+
+def test_ps_apply_ops_inplace_f64(monkeypatch):
+    """Runtime entry keeps f64 bitwise through the interpret-mode kernel."""
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    from repro.kernels.ps_apply import ops as pops
+    dense = RNG.normal(0, 1, (11, 7))
+    rows = RNG.integers(0, 11, 23).astype(np.int64)
+    delta = RNG.normal(0, 1, (23, 7))
+    want = dense.copy()
+    np.add.at(want, rows, delta)
+    got = dense.copy()
+    pops.scatter_add_inplace(got, rows, delta)
+    assert got.dtype == np.float64
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# topk mag (largest-|Δ|-first ordering)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 2, 6, 127, 128, 300])
+def test_topk_mag_full_order(n):
+    """Kernel ordering == stable descending argsort, incl. tie buckets."""
+    mags = RNG.integers(0, max(2, n // 3), n).astype(np.float32)
+    want = np.argsort(-mags, kind="stable")
+    got = np.asarray(tk.topk_mag_pallas(jnp.asarray(mags), interpret=True))
+    assert np.array_equal(got, want)
+    assert np.array_equal(np.asarray(tr.magnitude_order(jnp.asarray(mags))),
+                          want)
+
+
+def test_topk_mag_prefix_k():
+    mags = np.asarray([0.5, 9.0, 1.0, 9.0, 3.0], np.float32)
+    got = np.asarray(tk.topk_mag_pallas(jnp.asarray(mags), k=3,
+                                        interpret=True))
+    assert np.array_equal(got, [1, 3, 4])
+
+
+def test_topk_mag_ops_matches_seed_sort(monkeypatch):
+    """ops path == the seed Python sort key=-max|Δ| order (ties stable)."""
+    from repro.kernels.topk_mag import ops as tops
+    mags = RNG.integers(0, 4, 40).astype(np.float64)
+    idx = list(range(len(mags)))
+    idx.sort(key=lambda i: -mags[i])
+    monkeypatch.setenv("REPRO_PALLAS", "off")
+    assert np.array_equal(tops.magnitude_order(mags), idx)
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    assert np.array_equal(tops.magnitude_order(mags), idx)

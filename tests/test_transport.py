@@ -6,6 +6,7 @@ randomized over seeded sweeps, so the codec is exercised across array
 shapes/dtypes and every short-frame split point rather than a single happy
 path.
 """
+import os
 import queue
 import threading
 import time
@@ -510,3 +511,275 @@ def test_tcp_transport_duplex_end_to_end():
         for cs in client_conns.values():
             for conn in cs.values():
                 conn.close()
+
+
+# ---------------------------------------------------------------------------
+# zero-copy raw wire (RowCodec + RingViewReader)
+# ---------------------------------------------------------------------------
+
+
+def _mk_zero_copy(cap=1 << 16, keys=("k", "k2")):
+    ring = T.ShmRing.create(cap)
+    codec = T.RowCodec(list(keys))
+    bell = os.pipe()
+    reader = T.RingViewReader(ring, codec, bell[0], threading.Event())
+    chan = T.WireChannel("zc", T.ring_parts_writer(ring),
+                         max_frame=cap // 4, codec=codec,
+                         on_flush=lambda: T.ShmEdge.ring_bell(bell[1]))
+    return ring, codec, reader, chan, bell
+
+
+def _close_zero_copy(ring, bell):
+    # decoded views must be dropped before the segment closes, else
+    # SharedMemory.__del__ trips over the exported buffers at GC time
+    import gc
+    gc.collect()
+    ring.close()
+    ring.unlink()
+    for fd in bell:
+        try:
+            os.close(fd)
+        except OSError:
+            pass
+
+
+def _ring_mem(reader):
+    return np.frombuffer(reader.ring.buf, dtype=np.uint8)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_raw_wire_roundtrip_mixed_batch(seed):
+    """Raw-eligible Update/Deliver msgs and pickle fallbacks (control msgs,
+    unknown keys, f32 deltas) interleave on one stream in FIFO order."""
+    rng = np.random.default_rng(seed)
+    ring, codec, reader, chan, bell = _mk_zero_copy()
+    try:
+        msgs = []
+        for i in range(24):
+            rows = np.sort(rng.choice(64, size=int(rng.integers(1, 9)),
+                                      replace=False)).astype(np.int64)
+            delta = rng.normal(size=(len(rows), 3))
+            kind = i % 4
+            if kind == 0:
+                msgs.append(M.UpdateMsg(i, 1, 0, int(rng.integers(9)), "k",
+                                        rows, delta, epoch=2))
+            elif kind == 1:
+                msgs.append(M.DeliverMsg(i, 1, 0, 1, 3, "k2", rows, delta))
+            elif kind == 2:
+                msgs.append(M.AckMsg(i, 1))               # pickle fallback
+            else:
+                msgs.append(M.UpdateMsg(i, 1, 0, 0, "unknown-key", rows,
+                                        delta.astype(np.float32)))
+        chan.send_many(msgs)
+        got = []
+        while len(got) < len(msgs):
+            got.extend(reader._decode_ready())
+        assert [m.seq for m in got] == list(range(len(msgs)))
+        for a, b in zip(msgs, got):
+            _msg_equal(a, b)
+        T.release_msgs(got)
+        # EOF closes the zero-copy stream like the pickle one
+        chan.close()
+        assert reader.read_msgs() is None
+        assert reader.closed
+        got.clear()
+    finally:
+        _close_zero_copy(ring, bell)
+
+
+def test_zero_copy_views_alias_ring_until_released():
+    """Raw frames decode as views INTO the ring; the shared head cursor
+    holds at the pinned frame and only advances once every message from it
+    is released — that is the whole zero-copy contract."""
+    ring, codec, reader, chan, bell = _mk_zero_copy()
+    try:
+        rows = np.arange(5, dtype=np.int64)
+        chan.send_many([M.UpdateMsg(i, 0, 0, 0, "k", rows,
+                                    np.full((5, 2), float(i)))
+                        for i in range(3)])
+        got = reader._decode_ready()
+        assert len(got) == 3
+        mem = _ring_mem(reader)
+        for m in got:
+            assert np.shares_memory(m.rows, mem)
+            assert np.shares_memory(m.delta, mem)
+        del m
+        assert reader.pinned_frames() == 1
+        assert ring._head() == 0                   # nothing released yet
+        T.release_msgs(got[:2])
+        assert ring._head() == 0                   # frame still partly pinned
+        T.release_msg(got[2])
+        assert reader.pinned_frames() == 0
+        assert ring._head() == ring._tail()        # fully drained
+        got.clear()
+        del mem
+    finally:
+        _close_zero_copy(ring, bell)
+
+
+def test_materialize_unpins_and_owns():
+    """materialize_msg copies the arrays out of the ring (no aliasing — the
+    use-after-advance guard) and drops the pin so the head can advance."""
+    ring, codec, reader, chan, bell = _mk_zero_copy()
+    try:
+        rows = np.arange(4, dtype=np.int64)
+        delta = np.ones((4, 3)) * 7.0
+        chan.send(M.UpdateMsg(0, 0, 0, 0, "k", rows, delta))
+        (m,) = reader._decode_ready()
+        mem = _ring_mem(reader)
+        assert np.shares_memory(m.delta, mem)
+        T.materialize_msg(m)
+        assert not np.shares_memory(m.rows, mem)
+        assert not np.shares_memory(m.delta, mem)
+        assert m._frame is None
+        np.testing.assert_array_equal(m.delta, delta)
+        assert reader.pinned_frames() == 0
+        assert ring._head() == ring._tail()
+        # the owned copy survives the producer overwriting the ring bytes
+        chan.send(M.UpdateMsg(1, 0, 0, 0, "k", rows, delta * -1))
+        (m2,) = reader._decode_ready()
+        np.testing.assert_array_equal(m.delta, delta)
+        T.release_msg(m2)
+        del m2, mem
+    finally:
+        _close_zero_copy(ring, bell)
+
+
+def test_zero_copy_frame_straddling_wraparound_copies_out():
+    """A raw frame that straddles the ring wrap point cannot be viewed
+    contiguously: it must decode from an owned copy (no pin, no aliasing)
+    and the stream must stay intact across the wrap."""
+    rows = np.arange(3, dtype=np.int64)
+
+    def msg(i):
+        return M.UpdateMsg(i, 0, 0, 0, "k", rows, np.full((3, 1), float(i)))
+
+    codec = T.RowCodec(["k"])
+    one = sum(len(p) if isinstance(p, bytes) else p.nbytes
+              for p in codec._pack_raw([msg(0)])) + 4
+    cap = int(one * 2.5)                # third frame is forced to straddle
+    ring, codec, reader, chan, bell = _mk_zero_copy(cap=cap, keys=("k",))
+    try:
+        mem = _ring_mem(reader)
+        straddled = 0
+        for i in range(8):
+            chan.send(msg(i))
+            (m,) = reader._decode_ready()
+            assert m.uid == i
+            np.testing.assert_array_equal(m.delta, np.full((3, 1), float(i)))
+            body = (m.seq * one + 4) % cap if False else None  # doc only
+            if np.shares_memory(m.delta, mem):
+                T.release_msg(m)
+            else:
+                straddled += 1
+                assert getattr(m, "_frame", None) is None   # owned, unpinned
+            assert reader.pinned_frames() == 0
+            assert ring._head() == ring._tail()
+            del m
+        assert straddled > 0            # the wrap path actually ran
+        del mem
+    finally:
+        _close_zero_copy(ring, bell)
+
+
+def test_doorbell_rings_once_per_flush_not_per_frame():
+    """Batched doorbells: one wake per send_many even when the codec splits
+    the batch into many frames (plus one wake for EOF on close)."""
+    frames, bells = [], []
+    codec = T.RowCodec(["k"])
+    rows = np.arange(8, dtype=np.int64)
+    msgs = [M.UpdateMsg(i, 0, 0, 0, "k", rows, np.ones((8, 8)))
+            for i in range(16)]
+    one = codec.raw_size(msgs[0])
+    chan = T.WireChannel("c", frames.append, max_frame=2 * one + 64,
+                         codec=codec, on_flush=lambda: bells.append(1))
+    chan.send_many(msgs)
+    assert len(frames) > 4              # split into several raw frames...
+    assert len(bells) == 1              # ...but exactly one doorbell
+    chan.close()
+    assert len(bells) == 2              # EOF wake so the reader can exit
+
+
+def test_use_after_advance_guard_through_shard_apply():
+    """Drive view-backed messages through a real ServerShard batch: after
+    _handle_batch returns, every frame must be released (head advanced) and
+    nothing the shard retained may alias ring memory."""
+    from repro.core import policies
+    from repro.runtime import PSRuntime
+
+    x0 = {"k": np.zeros((8, 2)), "k2": np.zeros((8, 2))}
+    rt = PSRuntime(2, policies.vap(1e6), x0, n_shards=1)
+    shard = rt.shards[0]
+    ring, codec, reader, chan, bell = _mk_zero_copy()
+    try:
+        rows = np.arange(4, dtype=np.int64)
+        batch = [M.UpdateMsg(i, 0, 0, 0, "k", rows, np.ones((4, 2)))
+                 for i in range(4)]
+        batch += [M.UpdateMsg(4 + i, 0, 0, 0, "k2", rows, np.ones((4, 2)))
+                  for i in range(2)]
+        chan.send_many(batch)
+        got = []
+        while len(got) < len(batch):
+            got.extend(reader._decode_ready())
+        assert all(getattr(m, "_frame", None) is not None for m in got)
+        assert shard._handle_batch(got) is False     # no shutdown sentinel
+        assert rt.stats.violations == []
+        # every pin dropped: the read cursor is free to advance
+        assert reader.pinned_frames() == 0
+        assert ring._head() == ring._tail()
+        # ...and whatever the shard retained past the batch (pending VAP
+        # deliveries, queued updates, held msgs) owns its arrays
+        mem = _ring_mem(reader)
+        retained = [m for m, _ in shard.pending.values()]
+        retained += [m for q in shard.queued.values() for m in q]
+        retained += list(shard._held)
+        assert retained, "expected the VAP path to retain deliveries"
+        for m in retained:
+            assert not np.shares_memory(m.rows, mem)
+            assert not np.shares_memory(m.delta, mem)
+            assert getattr(m, "_frame", None) is None
+        got.clear()
+        del mem
+    finally:
+        _close_zero_copy(ring, bell)
+
+
+def test_tcpconn_probes_ioctl_once_and_caches_sndbuf():
+    """room() must not re-import fcntl/termios or re-read SO_SNDBUF per
+    call: the probe happens once at connection setup (the try_write hot
+    path calls room() per flush)."""
+    import builtins
+    import socket
+
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    cli = socket.create_connection(srv.getsockname())
+    peer, _ = srv.accept()
+    try:
+        conn = T.TcpConn(cli)
+        assert conn._sndbuf > 0
+        real_import = builtins.__import__
+
+        def poisoned(name, *a, **kw):
+            if name in ("fcntl", "termios"):
+                raise AssertionError(f"room() re-imported {name}")
+            return real_import(name, *a, **kw)
+
+        builtins.__import__ = poisoned
+        try:
+            r1 = conn.room()
+            r2 = conn.room()
+        finally:
+            builtins.__import__ = real_import
+        assert r1 >= 0 and r2 >= 0
+        if conn._ioctl is not None:
+            assert r1 <= conn._sndbuf
+        # degraded fallback: no ioctl -> "unknown" room + select probe
+        conn._ioctl = None
+        assert conn.room() == 1 << 62
+        assert conn.try_write(b"ping")
+        assert peer.recv(4) == b"ping"
+    finally:
+        for s in (cli, peer, srv):
+            s.close()
