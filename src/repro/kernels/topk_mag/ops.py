@@ -4,6 +4,14 @@
 PSRuntime(ps_kernels=True).  All paths implement the same contract —
 descending by magnitude, ties in first-occurrence order — so the flush
 ships updates in exactly the order the seed Python sort produced.
+
+The kernel/ref paths order in f32 (TPU lanes), but the flush magnitudes
+are f64 and magnitudes distinct in f64 can collapse to one f32 value;
+left alone that would ship updates in a different order than the numpy
+path `np.argsort(-mags, kind="stable")` and break bitwise simulator
+conformance.  The f32 cast is monotone, so every such collision is a
+contiguous run of the coarse order — `_refine_f32_ties` re-sorts each
+run by the exact f64 magnitudes to restore full parity.
 """
 from __future__ import annotations
 
@@ -12,17 +20,39 @@ import numpy as np
 from repro.kernels import pallas_mode
 
 
+def _refine_f32_ties(order: np.ndarray, m64: np.ndarray,
+                     m32: np.ndarray) -> np.ndarray:
+    """Exact-f64 fixup of an f32-coarse descending order.
+
+    Within an equal-f32 run the kernel emits first-occurrence (ascending
+    index) order, so a stable descending argsort of the run's f64 values
+    reproduces `np.argsort(-m64, kind="stable")` bitwise: strict f64
+    differences reorder the run, true f64 ties keep index order.
+    """
+    coarse = m32[order]
+    starts = np.flatnonzero(np.r_[True, coarse[1:] != coarse[:-1]])
+    ends = np.r_[starts[1:], coarse.shape[0]]
+    for s, e in zip(starts, ends):
+        if e - s > 1:
+            run = order[s:e]
+            order[s:e] = run[np.argsort(-m64[run], kind="stable")]
+    return order
+
+
 def magnitude_order(mags: np.ndarray) -> np.ndarray:
     """Indices ordering mags descending, ties stable; mags non-negative."""
     mode = pallas_mode()
-    if mode == "off" or mags.shape[0] <= 1:
-        return np.argsort(-mags, kind="stable")
+    m64 = np.ascontiguousarray(mags, dtype=np.float64)
+    if mode == "off" or m64.shape[0] <= 1:
+        return np.argsort(-m64, kind="stable")
     import jax.numpy as jnp
+    m32 = m64.astype(np.float32)
     if mode in ("on", "interpret"):
         from repro.kernels.topk_mag import kernel
-        out = kernel.topk_mag_pallas(jnp.asarray(mags, jnp.float32),
+        out = kernel.topk_mag_pallas(jnp.asarray(m32),
                                      interpret=(mode == "interpret"))
     else:
         from repro.kernels.topk_mag import ref
-        out = ref.magnitude_order(jnp.asarray(mags, jnp.float32))
-    return np.asarray(out)
+        out = ref.magnitude_order(jnp.asarray(m32))
+    order = np.array(out, dtype=np.int64)   # writable copy: refined in place
+    return _refine_f32_ties(order, m64, m32)

@@ -772,9 +772,9 @@ class PSRuntime(_WorkerFlowMixin):
                 else None
             for (p, s), edge in self._transport.edges.items():
                 if codec is not None:
-                    # zero-copy wire: raw row-block frames, one doorbell per
-                    # flush (on_flush) instead of one per frame, and an
-                    # in-ring view reader on the receive side
+                    # zero-copy wire: raw row-block frames, doorbell batched
+                    # to one wake per flush (per frame only when a batch
+                    # splits), and an in-ring view reader on the receive side
                     bell_w = edge.s2c_bell[1]
                     self._chan_sp[s][p] = T.WireChannel(
                         f"s{s}->p{p}",

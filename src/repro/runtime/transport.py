@@ -625,8 +625,19 @@ class WireChannel:
         a single oversized message still goes out whole — size the ring for
         the largest single row part)."""
         if self._codec is not None:
+            first = True
             for item in self._codec.frames(msgs, self._max_frame):
+                if not first and self._on_flush is not None:
+                    # Earlier frames of this batch are published but not yet
+                    # belled; if this next write blocks on ring space, the
+                    # parked reader must be woken to drain them or neither
+                    # side can ever advance (the wake byte persists in the
+                    # pipe, so ringing before the write cannot be lost).
+                    # The common single-frame flush keeps exactly one bell:
+                    # the send_many/close on_flush after the write.
+                    self._on_flush()
                 self._write(item)
+                first = False
             return
         frame = encode_frame(msgs)
         if (self._max_frame is not None and len(frame) > self._max_frame
@@ -680,11 +691,13 @@ class TcpConn:
         # inbound deliveries); never let a connect/accept timeout linger
         # and poison recv() mid-run
         sock.settimeout(None)
-        # probe the queued-bytes ioctl ONCE at connection setup and cache
-        # SO_SNDBUF — room() sits on the per-flush try_write hot path, and
-        # re-importing fcntl/termios plus a getsockopt per call costs more
-        # than the probe it guards
-        self._sndbuf = sock.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
+        # probe the queued-bytes ioctl ONCE at connection setup — room()
+        # sits on the per-flush try_write hot path, and re-importing
+        # fcntl/termios per call costs more than the probe it guards.
+        # SO_SNDBUF is NOT cached: Linux autotunes the send buffer upward
+        # when it was never set explicitly, and a stale cached size would
+        # under-report room() and refuse sends that fit (a per-call
+        # getsockopt is a cheap syscall, nothing like the import machinery).
         try:
             import fcntl
             import termios
@@ -708,9 +721,11 @@ class TcpConn:
         try:
             queued = struct.unpack(
                 "i", self._ioctl(self.sock, self._tiocoutq, b"\0" * 4))[0]
+            sndbuf = self.sock.getsockopt(socket.SOL_SOCKET,
+                                          socket.SO_SNDBUF)
         except OSError:
             return 1 << 62
-        return max(0, self._sndbuf - queued)
+        return max(0, sndbuf - queued)
 
     def try_write(self, data: bytes) -> bool:
         """Non-blocking write: refuse unless the whole frame fits in the
@@ -1072,8 +1087,11 @@ def ring_parts_writer(ring: ShmRing, deadline: float = float("inf"),
                       ) -> Callable[[object], None]:
     """Byte sink for a zero-copy :class:`WireChannel`: accepts either a
     plain bytes frame (EOF sentinel, pickle fallback) or a RowCodec list of
-    buffers, and does NOT ring the doorbell — the channel's ``on_flush``
-    rings it once per send_many instead of once per frame."""
+    buffers, and does NOT ring the doorbell itself — the channel rings via
+    ``on_flush``: once after a single-frame send_many (the common case),
+    and once per frame when a batch splits, so a producer blocking on ring
+    space can never strand published-but-unbelled frames behind a parked
+    reader."""
     def write(item) -> None:
         if isinstance(item, (bytes, bytearray, memoryview)):
             ring.write(item, deadline, abort)

@@ -315,3 +315,25 @@ def test_topk_mag_ops_matches_seed_sort(monkeypatch):
     assert np.array_equal(tops.magnitude_order(mags), idx)
     monkeypatch.setenv("REPRO_PALLAS", "interpret")
     assert np.array_equal(tops.magnitude_order(mags), idx)
+
+
+def test_topk_mag_ops_refines_sub_f32_resolution_ties(monkeypatch):
+    """Magnitudes distinct in f64 that collapse to one f32 value must still
+    ship in exact f64 descending order: the kernel's f32 coarse pass alone
+    would resolve them first-occurrence and diverge from the numpy path
+    (send order feeds non-associative float applies — bitwise simulator
+    conformance depends on it)."""
+    from repro.kernels.topk_mag import ops as tops
+    rng = np.random.default_rng(3)
+    # perturbations far below f32 resolution at 1.0 (~6e-8): one f32 bucket
+    sub = 1.0 + rng.permutation(8) * 1e-12
+    assert np.unique(sub.astype(np.float32)).size == 1
+    # mix in genuinely distinct values and an exact f64 tie inside the
+    # bucket (index 8 duplicates one of the first eight values)
+    mags = np.concatenate([sub, [sub[3], 2.0, 0.5, 7.0]])
+    want = np.argsort(-mags, kind="stable")
+    monkeypatch.setenv("REPRO_PALLAS", "interpret")
+    got = tops.magnitude_order(mags)
+    assert np.array_equal(got, want)
+    # the exact f64 tie stays first-occurrence: original index before dup
+    assert list(got).index(3) < list(got).index(8)

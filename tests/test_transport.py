@@ -682,9 +682,11 @@ def test_zero_copy_frame_straddling_wraparound_copies_out():
         _close_zero_copy(ring, bell)
 
 
-def test_doorbell_rings_once_per_flush_not_per_frame():
-    """Batched doorbells: one wake per send_many even when the codec splits
-    the batch into many frames (plus one wake for EOF on close)."""
+def test_doorbell_batched_per_flush_but_rings_every_frame_on_split():
+    """The common single-frame flush gets exactly one doorbell wake; a
+    batch the codec splits rings once per frame — every published frame
+    must be belled before the next write could block on ring space, or a
+    parked reader never drains it and the producer spins forever."""
     frames, bells = [], []
     codec = T.RowCodec(["k"])
     rows = np.arange(8, dtype=np.int64)
@@ -693,11 +695,60 @@ def test_doorbell_rings_once_per_flush_not_per_frame():
     one = codec.raw_size(msgs[0])
     chan = T.WireChannel("c", frames.append, max_frame=2 * one + 64,
                          codec=codec, on_flush=lambda: bells.append(1))
+    chan.send_many([msgs[0]])
+    assert len(frames) == 1 and len(bells) == 1   # single frame: one bell
     chan.send_many(msgs)
-    assert len(frames) > 4              # split into several raw frames...
-    assert len(bells) == 1              # ...but exactly one doorbell
-    chan.close()
-    assert len(bells) == 2              # EOF wake so the reader can exit
+    assert len(frames) > 5              # split into several raw frames...
+    assert len(bells) == len(frames)    # ...each belled (none strandable)
+    n = len(frames)
+    chan.close()                        # EOF frame + its wake so the reader
+    assert len(frames) == n + 1         # can see the stream end and exit
+    assert len(bells) == len(frames)
+
+
+def test_multi_frame_batch_larger_than_ring_does_not_deadlock():
+    """Deadlock regression: a send_many batch whose frames total more than
+    the ring's free capacity must complete against a reader parked on the
+    doorbell.  Before the per-frame bell, the producer published early
+    frames un-belled and then spun for space while the reader slept in
+    os.read — head never advanced and the run hung until the deadline."""
+    cap = 1 << 13                          # 8 KiB ring
+    ring = T.ShmRing.create(cap)
+    codec = T.RowCodec(["k"])
+    bell = os.pipe()
+    stop = threading.Event()
+    reader = T.RingViewReader(ring, codec, bell[0], stop)
+    deadline = time.monotonic() + 20       # regression fails loudly, not ∞
+    chan = T.WireChannel("zc", T.ring_parts_writer(ring, deadline),
+                         max_frame=cap // 4, codec=codec,
+                         on_flush=lambda: T.ShmEdge.ring_bell(bell[1]))
+    inbox: "queue.Queue" = queue.Queue()
+    errs: list = []
+    t = T.start_view_reader("rx", reader, inbox, errs.append)
+    try:
+        rows = np.arange(8, dtype=np.int64)
+        msgs = [M.UpdateMsg(i, 0, 0, 0, "k", rows, np.ones((8, 8)) * i)
+                for i in range(24)]        # ~15 KiB of raw frames > cap
+        sender = threading.Thread(target=chan.send_many, args=(msgs,))
+        sender.start()
+        got = []
+        while len(got) < len(msgs):
+            m = inbox.get(timeout=15)      # hangs here before the fix
+            T.materialize_msg(m)
+            got.append(m)
+        sender.join(timeout=15)
+        assert not sender.is_alive()
+        assert errs == []
+        assert [m.seq for m in got] == list(range(len(msgs)))
+        for i, m in enumerate(got):
+            assert np.array_equal(m.delta, np.ones((8, 8)) * i)
+        chan.close()
+        assert t.join(timeout=10) is None and not t.is_alive()
+        got.clear()
+    finally:
+        stop.set()
+        T.ShmEdge.ring_bell(bell[1])
+        _close_zero_copy(ring, bell)
 
 
 def test_use_after_advance_guard_through_shard_apply():
@@ -744,10 +795,12 @@ def test_use_after_advance_guard_through_shard_apply():
         _close_zero_copy(ring, bell)
 
 
-def test_tcpconn_probes_ioctl_once_and_caches_sndbuf():
-    """room() must not re-import fcntl/termios or re-read SO_SNDBUF per
-    call: the probe happens once at connection setup (the try_write hot
-    path calls room() per flush)."""
+def test_tcpconn_probes_ioctl_once_and_tracks_live_sndbuf():
+    """room() must not re-import fcntl/termios per call (the probe happens
+    once at connection setup), but it must read the LIVE SO_SNDBUF each
+    time — Linux autotunes the send buffer upward when it was never set
+    explicitly, and a stale cached size would under-report room() and
+    refuse sends that fit."""
     import builtins
     import socket
 
@@ -758,7 +811,6 @@ def test_tcpconn_probes_ioctl_once_and_caches_sndbuf():
     peer, _ = srv.accept()
     try:
         conn = T.TcpConn(cli)
-        assert conn._sndbuf > 0
         real_import = builtins.__import__
 
         def poisoned(name, *a, **kw):
@@ -774,7 +826,14 @@ def test_tcpconn_probes_ioctl_once_and_caches_sndbuf():
             builtins.__import__ = real_import
         assert r1 >= 0 and r2 >= 0
         if conn._ioctl is not None:
-            assert r1 <= conn._sndbuf
+            sndbuf = cli.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
+            assert r1 == sndbuf            # nothing queued yet
+            # growing the kernel buffer must be visible to the next room()
+            # call: room() tracks the live getsockopt reading, not a
+            # setup-time cache
+            cli.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 2 * sndbuf)
+            new = cli.getsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF)
+            assert conn.room() == new
         # degraded fallback: no ioctl -> "unknown" room + select probe
         conn._ioctl = None
         assert conn.room() == 1 << 62
