@@ -46,7 +46,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import bsp, ssp, vap
-from repro.runtime import PSRuntime
+from repro.runtime import PSRuntime, RuntimeConfig
 
 KEYS = {"w": (64, 8), "b": (16,)}
 CLOCKS = 60
@@ -114,9 +114,9 @@ def _one(name: str, policy, n_workers: int, transport: str,
          ps_kernels: bool = False, update_fn=None,
          wire: Optional[str] = None) -> Dict:
     x0 = {k: np.zeros(shape) for k, shape in KEYS.items()}
-    rt = PSRuntime(n_workers, policy, x0, n_shards=2,
+    rt = PSRuntime(RuntimeConfig(n_workers, policy, x0, n_shards=2,
                    threads_per_process=1, seed=0, transport=transport,
-                   zero_copy=zero_copy, ps_kernels=ps_kernels)
+                   zero_copy=zero_copy, ps_kernels=ps_kernels))
     lat: List[float] = []
     stop = threading.Event()
 

@@ -43,7 +43,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core import ssp
-from repro.runtime import PSRuntime, ReadGateway
+from repro.runtime import PSRuntime, ReadGateway, RuntimeConfig
 
 KEYS = {"w": (512, 64)}       # 256 KiB of float64: copies & scatters matter
 CLOCKS = 40
@@ -70,8 +70,8 @@ def _update_fn(w, clock, view, rng):
 def _one(transport: str, n_replicas: int, slo, n_workers: int,
          clocks: int, n_readers: int = 2) -> Dict:
     x0 = {k: np.zeros(shape) for k, shape in KEYS.items()}
-    rt = PSRuntime(n_workers, ssp(3), x0, n_shards=2,
-                   threads_per_process=1, seed=0, transport=transport)
+    rt = PSRuntime(RuntimeConfig(n_workers, ssp(3), x0, n_shards=2,
+                   threads_per_process=1, seed=0, transport=transport))
     rt.start(_update_fn, clocks, timeout=600)
     gw = (ReadGateway(rt, n_replicas=n_replicas,
                       transport=SERVING_OF[transport])

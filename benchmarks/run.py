@@ -69,6 +69,18 @@ def main() -> None:
     bench_serving.write_json(sv_rows, sv_out)
     print(f"# wrote {sv_out}")
 
+    print("# --- autoscaling: rebalanced vs static layouts ---")
+    from benchmarks import bench_autoscale
+    as_rows = bench_autoscale.run()
+    for r in as_rows:
+        all_rows.append(dict(r))
+        print(_csv_line(dict(r)))
+    bench_autoscale.gates(as_rows)
+    as_out = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "BENCH_autoscale.json")
+    bench_autoscale.write_json(as_rows, as_out)
+    print(f"# wrote {as_out}")
+
     print("# --- kernel reference-path microbenchmarks ---")
     from benchmarks import bench_kernels
     for r in bench_kernels.run():

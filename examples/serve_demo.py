@@ -48,7 +48,7 @@ import numpy as np
 
 def run_ps_demo(args) -> None:
     from repro.core import bsp, cvap, ssp, vap
-    from repro.runtime import FRESH, PSRuntime, ReadGateway
+    from repro.runtime import FRESH, PSRuntime, ReadGateway, RuntimeConfig
 
     policy = {"bsp": bsp(), "ssp3": ssp(3), "vap": vap(0.05),
               "cvap": cvap(3, 0.05)}[args.policy]
@@ -66,8 +66,8 @@ def run_ps_demo(args) -> None:
     slo = args.slo if args.slo == FRESH else int(args.slo)
     serving = {"queue": "queue", "proc": "shm", "shm": "shm",
                "tcp": "tcp"}[args.transport]
-    rt = PSRuntime(n_workers, policy, {"x": np.zeros(dim)}, n_shards=2,
-                   threads_per_process=1, seed=0, transport=args.transport)
+    rt = PSRuntime(RuntimeConfig(n_workers, policy, {"x": np.zeros(dim)}, n_shards=2,
+                   threads_per_process=1, seed=0, transport=args.transport))
     print(f"serving from live PS runtime: {n_workers} workers, "
           f"policy {policy.kind}, {n_clocks} clocks, "
           f"transport {args.transport}, {args.replicas} replicas "

@@ -194,12 +194,12 @@ def run_lda(corpus: LDACorpus, n_topics: int, policy: Policy,
                      straggler=straggler, seed=seed)
         stats = ps.run(wrapped, n_clocks)
     elif backend == "runtime":
-        from repro.runtime import PSRuntime
-        rt = PSRuntime(n_workers, policy,
+        from repro.runtime import PSRuntime, RuntimeConfig
+        rt = PSRuntime(RuntimeConfig(n_workers, policy,
                        {"word_topic": wt0, "topic": tc0},
                        n_shards=n_shards,
                        threads_per_process=threads_per_process,
-                       seed=seed, barrier_reads=barrier_reads)
+                       seed=seed, barrier_reads=barrier_reads))
         stats = rt.run(wrapped, n_clocks, timeout=timeout)
     else:
         raise ValueError(f"unknown backend {backend!r}")

@@ -12,6 +12,9 @@ client processes over loopback sockets / shared-memory rings
 with snapshot/restore of the master shard state in
 :mod:`repro.runtime.snapshot`.
 """
+from repro.runtime.autoscale import (AutoscaleAction, AutoscalePolicy,
+                                     Autoscaler)
+from repro.runtime.config import RuntimeConfig
 from repro.runtime.membership import (INF_CLOCK, MembershipEvent,
                                       MembershipManager, MembershipPlan,
                                       Partition)
@@ -22,10 +25,15 @@ from repro.runtime.messages import (AckBatchMsg, AckMsg, Channel, ClockMarker,
                                     ReplicaFinMsg, ReplicaStateMsg,
                                     ReplicaVcMsg, ShardFinMsg, SubscribeMsg,
                                     UnsubscribeMsg, UpdateMsg)
+from repro.runtime.metrics import (GatewayMetrics, MembershipMetrics,
+                                   MetricsHub, ProcessMetrics, ReplicaMetrics,
+                                   RunMetrics, RuntimeMetrics, ShardMetrics,
+                                   SnapshotMetrics)
 from repro.runtime.runtime import (TRANSPORTS, ClientProcess, PSRuntime,
                                    RuntimeViewHandle)
-from repro.runtime.serving import (FRESH, ReadGateway, ReadResult, Replica,
-                                   ReplicaSet, SERVING_TRANSPORTS)
+from repro.runtime.serving import (FRESH, ReadGateway, ReadResult,
+                                   ReadShedError, Replica, ReplicaSet,
+                                   SERVING_TRANSPORTS)
 from repro.runtime.shard import ServerShard
 from repro.runtime.snapshot import (conservative_vc, load_snapshot,
                                     save_snapshot, snapshot_params,
@@ -34,16 +42,20 @@ from repro.runtime.transport import (FifoAssert, FrameDecoder, ShmRing,
                                      WireChannel, encode_frame, require_tso)
 
 __all__ = [
-    "AckBatchMsg", "AckMsg", "Channel", "ClientProcess", "ClockMarker",
+    "AckBatchMsg", "AckMsg", "AutoscaleAction", "AutoscalePolicy",
+    "Autoscaler", "Channel", "ClientProcess", "ClockMarker",
     "ClockMsg", "DeliverMsg", "EpochAckMsg", "EpochBeginMsg", "EpochMsg",
-    "FRESH", "FifoAssert", "FrameDecoder", "FullyDelivered", "INF_CLOCK",
-    "InstallMsg", "MembershipEvent", "MembershipManager", "MembershipPlan",
-    "PSRuntime", "Partition", "ProcDoneMsg", "ReadGateway", "ReadResult",
-    "Replica", "ReplicaDeltaMsg", "ReplicaFinMsg", "ReplicaSet",
-    "ReplicaStateMsg", "ReplicaVcMsg", "RuntimeViewHandle",
-    "SERVING_TRANSPORTS", "ServerShard", "ShardFinMsg", "ShmRing",
-    "SubscribeMsg", "TRANSPORTS", "UnsubscribeMsg", "UpdateMsg",
-    "WireChannel", "conservative_vc", "encode_frame", "load_snapshot",
-    "require_tso", "save_snapshot", "snapshot_params", "take_snapshot",
-    "validate_vcs",
+    "FRESH", "FifoAssert", "FrameDecoder", "FullyDelivered",
+    "GatewayMetrics", "INF_CLOCK", "InstallMsg", "MembershipEvent",
+    "MembershipManager", "MembershipMetrics", "MembershipPlan",
+    "MetricsHub", "PSRuntime", "Partition", "ProcDoneMsg",
+    "ProcessMetrics", "ReadGateway", "ReadResult", "ReadShedError",
+    "Replica", "ReplicaDeltaMsg", "ReplicaFinMsg", "ReplicaMetrics",
+    "ReplicaSet", "ReplicaStateMsg", "ReplicaVcMsg", "RunMetrics",
+    "RuntimeConfig", "RuntimeMetrics", "RuntimeViewHandle",
+    "SERVING_TRANSPORTS", "ServerShard", "ShardFinMsg", "ShardMetrics",
+    "ShmRing", "SnapshotMetrics", "SubscribeMsg", "TRANSPORTS",
+    "UnsubscribeMsg", "UpdateMsg", "WireChannel", "conservative_vc",
+    "encode_frame", "load_snapshot", "require_tso", "save_snapshot",
+    "snapshot_params", "take_snapshot", "validate_vcs",
 ]

@@ -1,0 +1,96 @@
+"""Runtime configuration (:class:`RuntimeConfig`).
+
+:class:`~repro.runtime.runtime.PSRuntime` grew one keyword at a time —
+transports, snapshots, elastic membership, the zero-copy wire, kernels —
+until the constructor carried 15+ kwargs and every call site repeated the
+same sprawl.  ``RuntimeConfig`` is now the single construction surface:
+
+    from repro.runtime import PSRuntime, RuntimeConfig
+
+    rt = PSRuntime(RuntimeConfig(4, ssp(3), x0, transport="proc"))
+
+All validation lives in :meth:`RuntimeConfig.__post_init__` (the ValueError
+checks moved verbatim from the old ``PSRuntime.__init__``), so a config is
+either valid or never constructed — the runtime can trust every field.
+``PSRuntime(n_workers=..., ...)`` still works as a thin deprecation shim
+that builds the config and warns.
+
+Field order matches the legacy positional signature exactly, so migrating a
+call site is mechanical: ``PSRuntime(args...)`` ->
+``PSRuntime(RuntimeConfig(args...))``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+from typing import Optional, Tuple
+
+from repro.core.policies import Policy
+from repro.core.server import UpdateMap
+
+TRANSPORTS: Tuple[str, ...] = ("queue", "tcp", "shm", "proc")
+
+
+@dataclass
+class RuntimeConfig:
+    """Everything a :class:`PSRuntime` needs to build itself.
+
+    The first three fields are the required triple every run names
+    (worker count, consistency policy, initial table values); the rest
+    default to the single-host topology the test-suite uses.
+    """
+
+    n_workers: int
+    policy: Policy
+    init_params: UpdateMap
+    n_shards: int = 2
+    threads_per_process: int = 1
+    seed: int = 0
+    prioritize_by_magnitude: bool = True
+    check_invariants: bool = True
+    barrier_reads: bool = False
+    transport: str = "queue"
+    restore_from: Optional[dict] = None
+    snapshot_every: int = 0
+    snapshot_dir: Optional[str] = None
+    max_shards: Optional[int] = None
+    membership_plan: Optional[object] = None   # membership.MembershipPlan
+    zero_copy: Optional[bool] = None
+    ps_kernels: bool = False
+    # observability (PR 7): keep the per-shard/per-process load counters and
+    # the ClockMsg load piggyback on.  The hooks are cheap (<3% upd/s, gated
+    # in CI by bench_autoscale's A/B row) but can be switched off for
+    # apples-to-apples perf comparisons against older baselines.
+    metrics: bool = field(default=True)
+
+    def __post_init__(self) -> None:
+        if self.n_workers % self.threads_per_process:
+            raise ValueError("n_workers must divide into processes evenly")
+        if self.n_shards < 1:
+            raise ValueError("need at least one server shard")
+        if self.max_shards is not None and self.max_shards < self.n_shards:
+            raise ValueError("max_shards must be >= n_shards")
+        if self.barrier_reads and self.threads_per_process != 1:
+            raise ValueError("barrier_reads requires threads_per_process == 1")
+        if self.transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {self.transport!r}; "
+                             f"choose from {TRANSPORTS}")
+        if self.snapshot_every < 0:
+            raise ValueError("snapshot_every must be >= 0 (0 disables)")
+
+
+def config_from_legacy(*args, **kwargs) -> RuntimeConfig:
+    """Build a :class:`RuntimeConfig` from the legacy ``PSRuntime(...)``
+    positional/keyword argument list (the deprecation shim's worker)."""
+    names = [f.name for f in fields(RuntimeConfig)]
+    if len(args) > len(names):
+        raise TypeError(f"PSRuntime() takes at most {len(names)} "
+                        f"positional arguments ({len(args)} given)")
+    for name, value in zip(names, args):
+        if name in kwargs:
+            raise TypeError(f"PSRuntime() got multiple values for {name!r}")
+        kwargs[name] = value
+    unknown = set(kwargs) - set(names)
+    if unknown:
+        raise TypeError(f"PSRuntime() got unexpected keyword arguments "
+                        f"{sorted(unknown)}")
+    return RuntimeConfig(**kwargs)

@@ -85,7 +85,12 @@ class ClockMsg:
     process: int
     clock: int               # period just completed by `process`
     epoch: int = 0           # membership epoch at send time
-    seq: int = -1
+    load: object = None      # optional (LOAD_LEN,) float64 counter snapshot
+    seq: int = -1            # (repro.runtime.metrics): the process's load,
+                             # taken at this boundary, piggybacked on the
+                             # control message it already sends — control
+                             # frames stay pickled on every wire, so the
+                             # array rides along under queue/shm/tcp alike
 
 
 @dataclass

@@ -76,19 +76,22 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import controller
-from repro.core.policies import Policy
-from repro.core.server import RunStats, UpdateMap
+from repro.core.server import RunStats
 from repro.runtime import transport as T
+from repro.runtime.config import (TRANSPORTS, RuntimeConfig,
+                                  config_from_legacy)
 from repro.runtime.membership import (INF_CLOCK, MembershipManager,
-                                      MembershipPlan, Partition)
+                                      Partition)
 from repro.runtime.messages import (SHUTDOWN, AckBatchMsg, Channel,
                                     ClockMarker, ClockMsg, DeliverMsg,
                                     EpochAckMsg, EpochMsg, FullyDelivered,
                                     ProcDoneMsg, ShardFinMsg, UpdateMsg,
                                     group_by_channel, pump_inbox)
+from repro.runtime.metrics import (LOAD_BLOCK_CLOCK, LOAD_BLOCK_VALUE,
+                                   LOAD_LEN, LOAD_UPDATES, MetricsHub,
+                                   RuntimeMetrics)
 from repro.runtime.shard import ServerShard
 
-TRANSPORTS = ("queue", "tcp", "shm", "proc")
 _PROC_ALIAS = "shm"          # what transport="proc" resolves to
 
 
@@ -139,6 +142,12 @@ class ClientProcess:
         # slot's previous activation are filtered by this
         self.act_epoch = np.zeros(rt.n_slots, dtype=np.int64)
         self.staged: List[DeliverMsg] = []    # barrier_reads holding pen
+        # load counters (repro.runtime.metrics): bumped under locks the hot
+        # paths already hold (no new synchronization), snapshotted at clock
+        # boundaries and piggybacked on the outgoing ClockMsg
+        self.m_updates = 0
+        self.m_block_clock = 0.0
+        self.m_block_value = 0.0
         self.inbox: queue.Queue = queue.Queue()
         self._fifo = T.FifoAssert()           # per sender shard
         self._acks: List[Tuple[Channel, int]] = []      # (shard chan, uid)
@@ -432,8 +441,10 @@ class _WorkerFlowMixin:
                             f"staleness violation: worker {w} clock {clock} "
                             f"observed {st}")
         if blocked:
+            dt = time.monotonic() - t0
             with self._slock:
-                self.stats.block_time_clock += time.monotonic() - t0
+                self.stats.block_time_clock += dt
+                proc.m_block_clock += dt
 
     def _apply_update(self, w: int, clock: int, proc: ClientProcess,
                       key: str, delta: np.ndarray) -> np.ndarray:
@@ -456,12 +467,15 @@ class _WorkerFlowMixin:
             acc = proc.unsynced[w][key]
             acc += d2
             mag = float(np.max(np.abs(d2))) if d2.size else 0.0
+            proc.m_updates += 1                         # (under proc.cond)
             with self._slock:
                 self.stats.n_updates += 1
                 self.stats.max_update_mag = max(self.stats.max_update_mag, mag)
                 self._total[key] += d2
                 if blocked:
-                    self.stats.block_time_value += time.monotonic() - t0
+                    dt = time.monotonic() - t0
+                    self.stats.block_time_value += dt
+                    proc.m_block_value += dt
                 if self.check and self.policy.value_bounded:
                     bound = controller.vap_unsynced_bound(
                         self.policy, self.stats.max_update_mag)
@@ -493,6 +507,16 @@ class _WorkerFlowMixin:
                 staged_acks = proc.release_staged(new_min)
             proc.cond.notify_all()
         if advanced:
+            # metrics piggyback: snapshot this process's load counters at
+            # the boundary and ride them on the ClockMsg it already sends
+            # (one tiny float64 array; control frames are pickled on every
+            # wire).  Racy counter reads only wobble a rate estimate.
+            load = None
+            if self.metrics_on:
+                load = np.zeros(LOAD_LEN, dtype=np.float64)
+                load[LOAD_UPDATES] = proc.m_updates
+                load[LOAD_BLOCK_CLOCK] = proc.m_block_clock
+                load[LOAD_BLOCK_VALUE] = proc.m_block_value
             # ClockMsg routes by the current partition too; if the epoch
             # swapped between the update flush above and here, the old
             # owner's missing clock only *under*-states its applied vc
@@ -501,7 +525,7 @@ class _WorkerFlowMixin:
             with proc.route_lock:
                 part = proc.part
                 pairs = [(self._chan_ps[proc.pid][sid],
-                          ClockMsg(proc.pid, c, part.epoch))
+                          ClockMsg(proc.pid, c, part.epoch, load))
                          for c in advanced for sid in part.active]
                 for chan, msgs in group_by_channel(pairs):
                     self._send_many(chan, msgs)
@@ -523,72 +547,67 @@ class PSRuntime(_WorkerFlowMixin):
     ``transport="queue"`` runs worker *threads* in this process;
     ``"tcp"``/``"shm"``/``"proc"`` fork one OS process per client process
     and carry the same message protocol over the wire (see module docstring).
+
+    Construction goes through :class:`repro.runtime.config.RuntimeConfig`
+    (``PSRuntime(config)``); the legacy kwarg surface
+    (``PSRuntime(n_workers, policy, x0, ...)``) is a deprecation shim that
+    builds the config for you and warns.
     """
 
-    def __init__(self, n_workers: int, policy: Policy,
-                 init_params: UpdateMap,
-                 n_shards: int = 2,
-                 threads_per_process: int = 1,
-                 seed: int = 0,
-                 prioritize_by_magnitude: bool = True,
-                 check_invariants: bool = True,
-                 barrier_reads: bool = False,
-                 transport: str = "queue",
-                 restore_from: Optional[dict] = None,
-                 snapshot_every: int = 0,
-                 snapshot_dir: Optional[str] = None,
-                 max_shards: Optional[int] = None,
-                 membership_plan: Optional[MembershipPlan] = None,
-                 zero_copy: Optional[bool] = None,
-                 ps_kernels: bool = False):
-        if n_workers % threads_per_process:
-            raise ValueError("n_workers must divide into processes evenly")
-        if n_shards < 1:
-            raise ValueError("need at least one server shard")
-        if max_shards is not None and max_shards < n_shards:
-            raise ValueError("max_shards must be >= n_shards")
-        if barrier_reads and threads_per_process != 1:
-            raise ValueError("barrier_reads requires threads_per_process == 1")
-        if transport not in TRANSPORTS:
-            raise ValueError(f"unknown transport {transport!r}; "
-                             f"choose from {TRANSPORTS}")
-        if snapshot_every < 0:
-            raise ValueError("snapshot_every must be >= 0 (0 disables)")
-        self.transport_kind = _PROC_ALIAS if transport == "proc" else transport
+    def __init__(self, config: Optional[RuntimeConfig] = None,
+                 *args, **kwargs):
+        if isinstance(config, RuntimeConfig):
+            if args or kwargs:
+                raise TypeError("PSRuntime(config) takes no further "
+                                "arguments — put them on the RuntimeConfig")
+            cfg = config
+        else:
+            warnings.warn(
+                "PSRuntime(n_workers, policy, ...) is deprecated; build a "
+                "repro.runtime.RuntimeConfig and pass PSRuntime(config)",
+                DeprecationWarning, stacklevel=2)
+            legacy = () if config is None else (config,)
+            cfg = config_from_legacy(*legacy, *args, **kwargs)
+        self.config = cfg
+        # validation already ran in RuntimeConfig.__post_init__
+        self.transport_kind = (_PROC_ALIAS if cfg.transport == "proc"
+                               else cfg.transport)
         self._proc_mode = self.transport_kind != "queue"
-        self.P = n_workers
-        self.tpp = threads_per_process
-        self.n_proc = n_workers // threads_per_process
-        self.n_shards = n_shards              # initial active count
+        self.P = cfg.n_workers
+        self.tpp = cfg.threads_per_process
+        self.n_proc = cfg.n_workers // cfg.threads_per_process
+        self.n_shards = cfg.n_shards          # initial active count
         # elastic membership: n_slots shard slots are provisioned (threads +
         # channels for every transport, so forked clients inherit the wires)
         # but only n_shards are active in epoch 0; add_shard()/remove_shard()
         # re-partition live (repro.runtime.membership)
-        self.n_slots = n_shards if max_shards is None else int(max_shards)
-        self.policy = policy
-        self.seed = seed
-        self.prioritize = prioritize_by_magnitude
-        self.check = check_invariants
-        self.barrier_reads = barrier_reads
+        self.n_slots = (cfg.n_shards if cfg.max_shards is None
+                        else int(cfg.max_shards))
+        self.policy = cfg.policy
+        self.seed = cfg.seed
+        self.prioritize = cfg.prioritize_by_magnitude
+        self.check = cfg.check_invariants
+        self.barrier_reads = cfg.barrier_reads
         # zero_copy: raw RowCodec frames + in-ring view decode on the shm
         # transport (None -> on; other transports ignore it).  ps_kernels:
         # route the dense-block apply and the magnitude ordering through
         # repro.kernels.{ps_apply,topk_mag} (numpy dispatch when Pallas is
         # off, so flipping the flag on a CPU host changes nothing bitwise).
-        self.zero_copy = True if zero_copy is None else bool(zero_copy)
-        self.ps_kernels = bool(ps_kernels)
+        self.zero_copy = True if cfg.zero_copy is None else bool(cfg.zero_copy)
+        self.ps_kernels = bool(cfg.ps_kernels)
+        self.metrics_on = bool(cfg.metrics)
 
         # canonical (R, C) float64 master shapes; original shapes for reads
         self._shapes: Dict[str, Tuple[int, ...]] = {}
         self._x0: Dict[str, np.ndarray] = {}
         self._row_counts: Dict[str, int] = {}
-        for key, v in init_params.items():
+        for key, v in cfg.init_params.items():
             a = np.asarray(v, dtype=np.float64)
             self._shapes[key] = a.shape
             flat = a.reshape(a.shape[0], -1) if a.ndim > 1 else a.reshape(-1, 1)
             self._x0[key] = flat.copy()
             self._row_counts[key] = flat.shape[0]
-        self.partition = Partition(0, tuple(range(n_shards)),
+        self.partition = Partition(0, tuple(range(cfg.n_shards)),
                                    self._row_counts)
         # upper bound on one shard's in-stream bootstrap frame (publish
         # backpressure: gate resync attempts on sink room)
@@ -611,18 +630,24 @@ class PSRuntime(_WorkerFlowMixin):
 
         # mid-run periodic snapshots: taken by the shard thread that moves
         # the applied frontier across a multiple of `snapshot_every` clocks
-        self.snapshot_every = snapshot_every
-        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = cfg.snapshot_every
+        self.snapshot_dir = cfg.snapshot_dir
         self.snapshots: List[Tuple[int, dict]] = []
         self._snap_lock = threading.Lock()
-        self._next_snap_clock = snapshot_every if snapshot_every else (1 << 62)
+        self._next_snap_clock = (cfg.snapshot_every if cfg.snapshot_every
+                                 else (1 << 62))
 
         self.shards = [ServerShard(self, s) for s in range(self.n_slots)]
         self.membership = MembershipManager(self)
-        self._membership_plan = membership_plan
-        if restore_from is not None:
+        self._membership_plan = cfg.membership_plan
+        # unified metrics (repro.runtime.metrics): serving-tier objects
+        # register here so rt.metrics() can fold them in
+        self._metrics_hub = MetricsHub(self)
+        self._gateways: List[object] = []
+        self._replica_sets: List[object] = []
+        if cfg.restore_from is not None:
             from repro.runtime.snapshot import restore_into
-            restore_into(self, restore_from)
+            restore_into(self, cfg.restore_from)
         if self._proc_mode:
             self.procs: List[ClientProcess] = []
             self._chan_ps = None              # lives in the children
@@ -985,6 +1010,16 @@ class PSRuntime(_WorkerFlowMixin):
                 done = lo if done is None else min(done, lo)
         return done or 0
 
+    # ------------------------------------------------------------- metrics
+    def metrics(self) -> RuntimeMetrics:
+        """One typed snapshot of every runtime/serving stats surface —
+        the unified read API (:mod:`repro.runtime.metrics`).  Windowed
+        rates are measured against the previous call.  The scattered
+        legacy surfaces (``rt.stats``, ``gateway.stats``,
+        ``rset.pub_drops``...) keep working but are deprecated as read
+        APIs; new consumers (autoscaler, benches, demos) use this."""
+        return self._metrics_hub.collect()
+
     # ------------------------------------------------------------- reads
     def read(self, key: str, process: int = 0) -> np.ndarray:
         """Serving read: a Get() against a live process cache (threaded
@@ -1125,6 +1160,7 @@ class _ClientHost(_WorkerFlowMixin):
         # forked children stay numpy-only (importing jax after fork is not
         # fork-safe); the kernel paths run in the parent and in queue mode
         self.ps_kernels = False
+        self.metrics_on = rt.metrics_on
         self.n_shards = rt.n_shards
         self.n_slots = rt.n_slots
         self.n_proc = rt.n_proc

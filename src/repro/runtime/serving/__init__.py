@@ -14,11 +14,11 @@ under free interleavings, making the conformance story three-sided:
 simulator spec, write runtime, serving tier.
 """
 from repro.runtime.serving.gateway import (FRESH, GatewayStats, ReadGateway,
-                                           ReadResult)
+                                           ReadResult, ReadShedError)
 from repro.runtime.serving.replica import (SERVING_TRANSPORTS, Replica,
                                            ReplicaSet)
 
 __all__ = [
-    "FRESH", "GatewayStats", "ReadGateway", "ReadResult", "Replica",
-    "ReplicaSet", "SERVING_TRANSPORTS",
+    "FRESH", "GatewayStats", "ReadGateway", "ReadResult", "ReadShedError",
+    "Replica", "ReplicaSet", "SERVING_TRANSPORTS",
 ]

@@ -30,10 +30,22 @@ from typing import Dict, Optional, Union
 
 import numpy as np
 
+from repro.runtime.metrics import slo_key
 from repro.runtime.serving.replica import ReplicaSet
 
 FRESH = "fresh"                  # sentinel SLO: serve the master state
 Slo = Union[int, str, None]
+
+
+class ReadShedError(RuntimeError):
+    """A ``fresh`` read refused by SLO-aware admission control: the master
+    is hot and the gateway is shedding master-path reads (the autoscaler's
+    :meth:`ReadGateway.set_shed_fresh`).  Clients retry, degrade to a
+    bounded SLO, or surface the overload."""
+
+    def __init__(self, key: str):
+        super().__init__(f"fresh read of {key!r} shed: master overloaded")
+        self.key = key
 
 
 @dataclass
@@ -41,7 +53,7 @@ class ReadResult:
     """One served read, stamped with how stale it actually was."""
     value: np.ndarray            # in the key's original shape
     key: str
-    source: str                  # "replica:<rid>" or "master"
+    source: str                  # "replica:<rid>", "cache" or "master"
     staleness: int               # measured clocks behind the master vc
     slo: Slo                     # what the client asked for
     escalated: bool              # no replica qualified before the deadline
@@ -50,13 +62,19 @@ class ReadResult:
 
 @dataclass
 class GatewayStats:
+    """Deprecated as a read surface: consume ``rt.metrics().gateways``
+    (:mod:`repro.runtime.metrics`) instead; the fields stay for
+    back-compat and as the hub's raw source."""
     n_reads: int = 0
     n_replica_reads: int = 0
     n_master_reads: int = 0      # fresh SLO + escalations
     n_escalations: int = 0
+    n_shed: int = 0              # fresh reads refused by admission control
+    n_cache_hits: int = 0        # reads served from the gateway cache
     max_served_staleness: int = 0
     block_time: float = 0.0      # time actually parked on the doorbell only
     reads_per_replica: Dict[int, int] = field(default_factory=dict)
+    reads_by_slo: Dict[str, int] = field(default_factory=dict)
 
 
 class ReadGateway:
@@ -69,20 +87,48 @@ class ReadGateway:
 
     def __init__(self, rt, n_replicas: int = 2, transport: str = "queue",
                  check: bool = True, bootstrap_from_snapshot: bool = False,
-                 replica_set: Optional[ReplicaSet] = None):
+                 replica_set: Optional[ReplicaSet] = None,
+                 read_cache: bool = False):
         self.rt = rt
         self.replicas = replica_set if replica_set is not None else ReplicaSet(
             rt, n_replicas, transport=transport, check=check,
             bootstrap_from_snapshot=bootstrap_from_snapshot)
         self.stats = GatewayStats()
         self._slock = threading.Lock()
+        # SLO-aware admission: while engaged (autoscaler's master-hot
+        # signal), fresh reads are refused with ReadShedError instead of
+        # adding master-shard lock traffic
+        self.shed_fresh = False
+        # gateway read cache (within a vc stamp): serve repeated hot-key
+        # reads without touching a replica while the cached stamp still
+        # meets the request's SLO.  {key: (flat value copy, vc at copy)} —
+        # staleness is re-measured against the LIVE master vc on every hit,
+        # so an advanced master frontier invalidates naturally and a cached
+        # read can never stamp staler than requested.
+        self.read_cache = read_cache
+        self._cache: Dict[str, tuple] = {}
+        reg = getattr(rt, "_gateways", None)
+        if reg is not None:                  # unified metrics registry
+            reg.append(self)
+
+    # ------------------------------------------------------------ admission
+    def set_shed_fresh(self, shed: bool) -> None:
+        """Engage/release fresh-read shedding (SLO-aware admission)."""
+        self.shed_fresh = bool(shed)
 
     # ---------------------------------------------------------------- reads
     def read(self, key: str, slo: Slo = None,
              timeout: float = 30.0) -> ReadResult:
         """Serve one read under the declared staleness SLO (module doc)."""
         t0 = time.monotonic()
+        with self._slock:
+            k = slo_key(slo)
+            self.stats.reads_by_slo[k] = self.stats.reads_by_slo.get(k, 0) + 1
         if slo == FRESH:
+            if self.shed_fresh:
+                with self._slock:
+                    self.stats.n_shed += 1
+                raise ReadShedError(key)
             return self._serve_master(key, slo, t0, escalated=False)
         bound = float("inf") if slo is None else int(slo)
         if bound < 0:
@@ -92,6 +138,9 @@ class ReadGateway:
         fails = 0
         blocked = 0.0
         while True:
+            res = self._try_cache(key, bound, slo, t0)
+            if res is not None:
+                break
             with rset.cond:
                 v0 = rset.version
             res = self._try_replicas(key, bound, slo, t0)
@@ -118,14 +167,46 @@ class ReadGateway:
                 self.stats.block_time += blocked
         return res
 
+    def _try_cache(self, key: str, bound: float, slo: Slo,
+                   t0: float) -> Optional[ReadResult]:
+        """Serve from the gateway cache if its stamp still meets the SLO.
+
+        The cached entry's vc was sampled at (or conservatively before) the
+        moment its value was copied; measuring it against the *live* master
+        vc can only overstate the true staleness (the frontier is
+        monotone), so a hit never stamps staler than it really is — and an
+        entry whose measured lag exceeds the bound simply misses (the vc
+        advance invalidated it)."""
+        if not self.read_cache:
+            return None
+        with self._slock:
+            ent = self._cache.get(key)
+        if ent is None:
+            return None
+        flat, cvc = ent
+        lag = self.replicas.staleness(cvc, self.replicas.master_vc())
+        if lag > bound:
+            return None
+        with self._slock:
+            self.stats.n_reads += 1
+            self.stats.n_cache_hits += 1
+            self.stats.max_served_staleness = max(
+                self.stats.max_served_staleness, lag)
+        return ReadResult(flat.copy().reshape(self.rt._shapes[key]), key,
+                          "cache", lag, slo, False, time.monotonic() - t0)
+
+    def _cache_put(self, key: str, flat: np.ndarray, vc) -> None:
+        with self._slock:
+            self._cache[key] = (flat, vc)
+
     def _try_replicas(self, key: str, bound: float, slo: Slo,
                       t0: float) -> Optional[ReadResult]:
         rset = self.replicas
         mvc = rset.master_vc()
         # least-loaded first; the racy .reads peek only orders candidates
         for rep in sorted(rset.replicas, key=lambda r: r.reads):
-            if rep.poisoned:
-                continue                       # ingest failed: never serve
+            if rep.poisoned or rep.retired:
+                continue                       # ingest failed / drained out
             if rset.staleness(rep.vc, mvc) > bound:
                 continue                       # cheap unlocked pre-filter
             value, rvc = rep.serve(key)
@@ -141,6 +222,11 @@ class ReadGateway:
                     self.stats.max_served_staleness, lag)
                 self.stats.reads_per_replica[rep.rid] = (
                     self.stats.reads_per_replica.get(rep.rid, 0) + 1)
+            if self.read_cache:
+                # rep.serve already copied out of the replica buffers; the
+                # reshape below shares that copy with the caller, so the
+                # cache keeps its own
+                self._cache_put(key, value.copy(), rvc)
             return ReadResult(value.reshape(self.rt._shapes[key]), key,
                               f"replica:{rep.rid}", lag, slo, False,
                               time.monotonic() - t0)
@@ -148,12 +234,20 @@ class ReadGateway:
 
     def _serve_master(self, key: str, slo: Slo, t0: float,
                       escalated: bool) -> ReadResult:
+        # cache stamp sampled BEFORE the copy: everything the stamp claims
+        # is certainly in the copied value (the frontier is monotone), so
+        # hits measured against it stay conservative
+        mvc = self.replicas.master_vc() if self.read_cache else None
         value = self.rt.master_value(key)      # per-shard-locked assembly
         with self._slock:
             self.stats.n_reads += 1
             self.stats.n_master_reads += 1
             if escalated:
                 self.stats.n_escalations += 1
+        if self.read_cache:
+            flat = np.ascontiguousarray(value).reshape(
+                self.rt._x0[key].shape).copy()
+            self._cache_put(key, flat, mvc)
         return ReadResult(value, key, "master", 0, slo, escalated,
                           time.monotonic() - t0)
 
@@ -161,6 +255,9 @@ class ReadGateway:
     def add_replica(self, bootstrap_from_snapshot: bool = False):
         return self.replicas.add_replica(
             bootstrap_from_snapshot=bootstrap_from_snapshot)
+
+    def remove_replica(self, rid=None):
+        return self.replicas.remove_replica(rid)
 
     def close(self, timeout: float = 10.0) -> None:
         self.replicas.close(timeout=timeout)

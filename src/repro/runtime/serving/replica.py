@@ -91,6 +91,7 @@ class Replica:
         self.inbox: queue.Queue = queue.Queue()
         self.fins: set = set()              # shards that acked unsubscribe
         self.poisoned = False               # ingest failed: out of rotation
+        self.retired = False                # drained by remove_replica()
         self.reads = 0                      # served reads (routing cost)
         self.deltas_applied = 0
         self.bytes_ingested = 0
@@ -213,6 +214,9 @@ class ReplicaSet:
         # replica to newly activated slots (their in-stream bootstrap makes
         # the migrated rows exact) and unsubscribe from retired ones
         rt.membership.add_listener(self._on_epoch)
+        reg = getattr(rt, "_replica_sets", None)
+        if reg is not None:                  # unified metrics registry
+            reg.append(self)
 
     # -------------------------------------------------------------- plumbing
     def _notify(self) -> None:
@@ -265,6 +269,38 @@ class ReplicaSet:
         self.rt._send(self._ctrl[sid], SubscribeMsg(rep.rid, chan,
                                                     want_state=True))
 
+    def remove_replica(self, rid: Optional[int] = None) -> Optional[Replica]:
+        """Drain a replica out of the serving rotation (autoscaler
+        scale-down).  The replica is marked ``retired`` — the gateway stops
+        routing to it immediately — and unsubscribed from every shard; its
+        ingest thread keeps draining in-flight publishes until ``close()``
+        tears the edges down, so the shard side never blocks on it.  Picks
+        the least-loaded live replica when ``rid`` is None; refuses to
+        retire the last live one.  Returns the retired replica or None."""
+        if self._closed:
+            raise RuntimeError("replica set is closed")
+        live = [r for r in self.replicas if not (r.retired or r.poisoned)]
+        if len(live) <= 1:
+            return None                     # never drain the whole tier
+        if rid is None:
+            rep = min(live, key=lambda r: r.reads)
+        else:
+            rep = next((r for r in live if r.rid == rid), None)
+            if rep is None:
+                return None
+        rep.retired = True
+        for sid in sorted(self._subscribed.get(rep.rid, set())):
+            self._subscribed[rep.rid].discard(sid)
+            self.rt._send(self._ctrl[sid], UnsubscribeMsg(rep.rid))
+        self._notify()                      # wake parked readers to re-pick
+        return rep
+
+    @property
+    def n_live(self) -> int:
+        """Replicas currently in the serving rotation."""
+        return sum(1 for r in self.replicas
+                   if not (r.retired or r.poisoned))
+
     def _on_epoch(self, epoch: int, part, added: List[int],
                   removed: List[int]) -> None:
         """Membership listener: re-wire every replica's subscriptions.
@@ -277,6 +313,8 @@ class ReplicaSet:
         if self._closed:
             return
         for rep in self.replicas:
+            if rep.retired:
+                continue
             for sid in added:
                 self._subscribe(rep, sid)
             for sid in removed:

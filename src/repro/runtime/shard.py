@@ -68,6 +68,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from collections import defaultdict, deque
 from typing import Dict, List, Optional, Tuple
 
@@ -131,6 +132,14 @@ class ServerShard:
         self.pub_drops = 0                 # publish cycles dropped on a full
         self.pub_resyncs = 0               # sink / successful re-bootstraps
         self._vc_dirty = False
+        # load counters (repro.runtime.metrics): single-writer — only this
+        # shard's thread bumps them, collectors read racily.  proc_load maps
+        # pid -> (clock, counters) from the ClockMsg load piggyback.
+        self.m_rows_applied = 0            # row-updates applied
+        self.m_bytes_applied = 0           # delta bytes applied
+        self.m_lock_wait = 0.0             # cumulative dense-lock wait (s)
+        self.m_last_publish = 0.0          # monotonic ts of last publish
+        self.proc_load: Dict[int, Tuple[int, np.ndarray]] = {}
         self.thread = threading.Thread(
             target=self._loop, name=f"ps-shard-{sid}", daemon=True)
 
@@ -241,6 +250,12 @@ class ServerShard:
                 self.clock_vc[msg.process] = max(
                     self.clock_vc[msg.process], msg.clock)
             self._vc_dirty = True
+            if msg.load is not None:
+                # metrics piggyback: the process's boundary counter snapshot
+                # (monotone per process; keep the newest boundary)
+                cur = self.proc_load.get(msg.process)
+                if cur is None or msg.clock >= cur[0]:
+                    self.proc_load[msg.process] = (msg.clock, msg.load)
             # echo the period-completed marker to every peer.  All of the
             # process's period-<=clock updates precede this message on the
             # same FIFO channel, so their DeliverMsgs are already enqueued
@@ -361,10 +376,21 @@ class ServerShard:
             return
         rt = self.rt
         by_key: Dict[str, List[UpdateMsg]] = {}
+        n_rows = n_bytes = 0
         for msg in run:
             by_key.setdefault(msg.key, []).append(msg)
             self.applied_parts[msg.process] += 1
+            n_rows += msg.rows.size
+            n_bytes += msg.nbytes
+        # apply-lock wait: how long the dense blocks were contended (master
+        # reads, migration cuts).  One extra monotonic() pair per *batch*,
+        # and only with metrics on — the <3% overhead gate covers this.
+        t_lock = time.monotonic() if rt.metrics_on else 0.0
         with self.lock:
+            if t_lock:
+                self.m_lock_wait += time.monotonic() - t_lock
+            self.m_rows_applied += n_rows
+            self.m_bytes_applied += n_bytes
             A = self.part.A
             use_kernels = getattr(rt, "ps_kernels", False)
             for key, msgs in by_key.items():
@@ -567,6 +593,7 @@ class ServerShard:
         full sink marks the replica stale for drop-and-resync."""
         vc_dirty, self._vc_dirty = self._vc_dirty, False
         if self.subscribers:
+            self.m_last_publish = time.monotonic()
             stamp = self.vc_snapshot() if vc_dirty else None
             for rid, chan in self.subscribers.items():
                 if rid in self._stale_subs:

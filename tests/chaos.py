@@ -32,7 +32,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import AsyncPS, NetworkModel, policies
-from repro.runtime import MembershipPlan, PSRuntime, ReadGateway
+from repro.runtime import MembershipPlan, PSRuntime, ReadGateway, RuntimeConfig
 
 # ---------------------------------------------------------------------------
 # workloads
@@ -55,9 +55,42 @@ def det_fn(seed: int):
     return fn
 
 
-def expected_final(seed: int, n_workers: int, n_clocks: int
+def zipf_fn(seed: int, alpha: float = 1.3, burst_every: int = 3):
+    """Zipf-skewed bursty deltas, still a pure function of (worker, clock).
+
+    Row popularity follows a Zipf(alpha) ranking with the hottest rows on
+    EVEN row ids of ``a`` — under the round-robin partition
+    (``active[r % A]``) a 2-active layout concentrates them on one slot, so
+    the load is genuinely imbalanced until a split spreads the even rows
+    over more owners.  Every ``burst_every``-th clock is a burst (many rows
+    touched), the rest are lulls (few) — the bursty signal the autoscaler's
+    windowed rates must ride without breaking the bounds.  Untouched rows
+    are zero and the client elides them, so per-shard rows-applied load
+    mirrors the skew."""
+    n_rows = x0()["a"].shape[0]
+    # rank rows: even ids first (hot), then odd — Zipf over that ranking
+    ranked = sorted(range(n_rows), key=lambda r: (r % 2, r))
+    p = np.array([1.0 / (i + 1) ** alpha for i in range(n_rows)])
+    p /= p.sum()
+
+    def fn(w, clock, view, rng):
+        r = np.random.default_rng((seed ^ 0x21BF, w, clock))
+        burst = (clock % burst_every) == 0
+        n_touch = int(r.integers(3, n_rows + 1)) if burst else 1
+        rows = r.choice(n_rows, size=n_touch, replace=False, p=p)
+        da = np.zeros_like(x0()["a"])
+        for i in rows:
+            da[ranked[i]] = r.integers(-3, 4, size=da.shape[1])
+        out = {"a": da}
+        if burst:
+            out["b"] = r.integers(-3, 4, size=5).astype(float)
+        return out
+    return fn
+
+
+def expected_final(seed: int, n_workers: int, n_clocks: int, fn=None
                    ) -> Dict[str, np.ndarray]:
-    fn = det_fn(seed)
+    fn = det_fn(seed) if fn is None else fn
     out = {k: v.astype(float) for k, v in x0().items()}
     for w in range(n_workers):
         for c in range(n_clocks):
@@ -234,11 +267,13 @@ class SloReader:
         self.bad: List[tuple] = []
         self.errors: List[BaseException] = []
         self.n_reads = 0
+        self.n_shed = 0                      # fresh reads refused by admission
         self._stop = threading.Event()
         self.thread = threading.Thread(target=self._run, daemon=True,
                                        name="chaos-slo-reader")
 
     def _run(self) -> None:
+        from repro.runtime import ReadShedError
         slos = [0, 1, 3, None, "fresh"]
         i = 0
         while not self._stop.is_set():
@@ -247,6 +282,9 @@ class SloReader:
             i += 1
             try:
                 res = self.gw.read(key, slo=slo, timeout=10.0)
+            except ReadShedError:            # admission control under a hot
+                self.n_shed += 1             # master: expected, not an error
+                continue
             except BaseException as e:       # a dead reader would make the
                 self.errors.append(e)        # SLO assertions pass vacuously
                 return
@@ -262,21 +300,43 @@ class SloReader:
         self.thread.join(timeout=10.0)
 
 
+def chaos_autoscale_policy():
+    """Aggressive knobs so the autoscaler genuinely churns within a short
+    chaos run: tight windows, minimal cooldown, split/drain thresholds the
+    Zipf bursts and lulls both cross."""
+    from repro.runtime import AutoscalePolicy
+    return AutoscalePolicy(interval=0.05, cooldown=0.2,
+                           split_imbalance=1.2, split_min_rows_s=10.0,
+                           drain_max_rows_s=8.0, escalation_hi=0.10,
+                           escalation_lo=0.02, drain_patience=2,
+                           min_window_reads=3, shed_lock_wait_frac=0.15)
+
+
 def chaos_run(seed: int, pol, n_clocks: int, transport: str = "queue",
               max_shards: int = 4, n_events: int = 4, serving: bool = False,
               wedge: bool = False, serving_transport: str = "queue",
+              autoscale: bool = False, fn=None,
               timeout: float = 110.0):
     """One full chaos leg: free 4-worker run + scripted membership faults,
     optionally a gateway under SLO'd reads and a replica wedger (which
     needs a wire serving transport — queue edges are unbounded and cannot
-    exert backpressure).  Returns ``(rt, stats, plan, reader)``."""
-    plan = random_membership_script(seed, n_clocks, n_shards=2,
-                                    max_shards=max_shards, n_events=n_events)
-    rt = PSRuntime(4, pol, x0(), n_shards=2, threads_per_process=2,
+    exert backpressure).  Returns ``(rt, stats, plan, reader)``.
+
+    With ``autoscale=True`` the *autoscaler itself* is the membership churn
+    driver (no scripted plan — scripted slot picks would race the
+    autoscaler's): an :class:`~repro.runtime.Autoscaler` with the
+    aggressive :func:`chaos_autoscale_policy` splits/drains shards (and
+    scales replicas / sheds fresh reads when ``serving``) while the run's
+    bounds and counter audit must keep holding.  The started instance is
+    attached as ``rt.autoscaler``.  ``fn`` overrides the update workload
+    (default :func:`det_fn`; pass :func:`zipf_fn` for skewed bursts)."""
+    plan = None if autoscale else random_membership_script(
+        seed, n_clocks, n_shards=2, max_shards=max_shards, n_events=n_events)
+    rt = PSRuntime(RuntimeConfig(4, pol, x0(), n_shards=2, threads_per_process=2,
                    seed=seed, max_shards=max_shards, transport=transport,
-                   membership_plan=plan)
-    reader = wedger = gw = None
-    rt.start(det_fn(seed), n_clocks, timeout=timeout)
+                   membership_plan=plan))
+    reader = wedger = gw = asc = None
+    rt.start(det_fn(seed) if fn is None else fn, n_clocks, timeout=timeout)
     try:
         if serving:
             gw = ReadGateway(rt, n_replicas=2, transport=serving_transport)
@@ -286,8 +346,14 @@ def chaos_run(seed: int, pol, n_clocks: int, transport: str = "queue",
                 wedger = ReplicaWedger(gw.replicas, seed, rt=rt,
                                        quiet_after=int(n_clocks * 0.7))
                 wedger.start()
+        if autoscale:
+            from repro.runtime import Autoscaler
+            asc = Autoscaler(rt, gw, chaos_autoscale_policy()).start()
+            rt.autoscaler = asc
         stats = rt.wait()
     finally:
+        if asc is not None:
+            asc.stop()
         if wedger is not None:
             wedger.stop()
         if reader is not None:

@@ -24,7 +24,8 @@ import pytest
 from repro.core import policies
 
 from chaos import (assert_counters, assert_paper_bounds, chaos_run,
-                   expected_final, run_sim_schedule, random_schedule, x0)
+                   expected_final, run_sim_schedule, random_schedule, x0,
+                   zipf_fn)
 
 pytestmark = pytest.mark.chaos
 
@@ -121,6 +122,74 @@ def test_runtime_membership_chaos_multiprocess():
     for k, ref in expected_final(seed, 4, n_clocks).items():
         np.testing.assert_array_equal(rt.master_value(k).reshape(ref.shape),
                                       ref)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler leg: the control loop IS the membership churn driver
+# ---------------------------------------------------------------------------
+
+
+def _assert_autoscale_outcome(rt, stats, seed, n_clocks, fn):
+    """Bounds + exact audit + exact final state, with the autoscaler (not a
+    script) churning membership under Zipf-skewed bursty load."""
+    assert stats.violations == [], stats.violations[:5]
+    assert_counters(rt)
+    if rt.policy.clock_bounded:
+        assert stats.max_observed_staleness <= rt.policy.staleness
+    for k, ref in expected_final(seed, 4, n_clocks, fn=fn).items():
+        np.testing.assert_array_equal(
+            rt.master_value(k).reshape(ref.shape), ref,
+            err_msg=f"autoscale chaos seed={seed} master[{k}]")
+    # the churn was real: at least one membership op actually landed
+    summary = rt.autoscaler.summary()
+    assert summary.get("add_shard", 0) + summary.get("remove_shard", 0) >= 1, (
+        summary, rt.autoscaler.actions)
+
+
+@pytest.mark.parametrize("polname,pol", _POLICIES, ids=[p[0] for p in _POLICIES])
+def test_runtime_autoscaler_chaos_smoke(polname, pol):
+    """Zipf-skewed bursty load concentrates rows on one slot; the
+    autoscaler splits/drains shards live while the Lemma bounds and the
+    zero-lost/duplicated counter audit keep holding."""
+    seed = {"ssp3": 71, "vap": 72, "cvap": 73}[polname]
+    n_clocks = 80
+    fn = zipf_fn(seed)
+    rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, autoscale=True,
+                                   fn=fn)
+    assert plan is None                       # the autoscaler drives churn
+    _assert_autoscale_outcome(rt, stats, seed, n_clocks, fn)
+
+
+@pytest.mark.serving
+def test_serving_autoscaler_chaos_smoke():
+    """Autoscaler + gateway: replica scaling and fresh-read shedding under
+    SLO'd reads — every served stamp stays within its request, shed reads
+    surface as ReadShedError (counted, tolerated), and the bounds/audit
+    hold through the churn."""
+    seed = 74
+    n_clocks = 80
+    fn = zipf_fn(seed)
+    rt, stats, plan, reader = chaos_run(seed, policies.ssp(3), n_clocks,
+                                        autoscale=True, serving=True, fn=fn)
+    _assert_autoscale_outcome(rt, stats, seed, n_clocks, fn)
+    assert reader.bad == [], reader.bad[:5]
+    assert reader.errors == [], reader.errors[:3]
+    assert reader.n_reads > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("transport", ["shm", "tcp"])
+@pytest.mark.parametrize("polname,pol", _POLICIES, ids=[p[0] for p in _POLICIES])
+def test_runtime_autoscaler_chaos_wire_full(polname, pol, transport):
+    """The full matrix: forked OS clients on real wires (shm rings / TCP
+    sockets) with the autoscaler churning membership — the epoch barrier,
+    the piggybacked metrics loads, and the audit all cross the wire."""
+    seed = {"ssp3": 81, "vap": 82, "cvap": 83}[polname]
+    n_clocks = 40
+    fn = zipf_fn(seed)
+    rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, transport=transport,
+                                   autoscale=True, fn=fn, timeout=150.0)
+    _assert_autoscale_outcome(rt, stats, seed, n_clocks, fn)
 
 
 # ---------------------------------------------------------------------------

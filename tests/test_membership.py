@@ -22,7 +22,7 @@ import numpy as np
 import pytest
 
 from repro.core import AsyncPS, NetworkModel, policies
-from repro.runtime import MembershipPlan, PSRuntime, ReadGateway
+from repro.runtime import MembershipPlan, PSRuntime, ReadGateway, RuntimeConfig
 
 from chaos import assert_counters, det_fn, expected_final, x0
 
@@ -60,8 +60,8 @@ def test_add_and_remove_mid_run_equals_simulator(polname, pol):
                   network=NetworkModel(seed=seed))
     st_sim = sim.run(fn, 24)
 
-    rt = PSRuntime(4, pol, x0(), n_shards=2, threads_per_process=2,
-                   seed=seed, max_shards=4)
+    rt = PSRuntime(RuntimeConfig(4, pol, x0(), n_shards=2, threads_per_process=2,
+                   seed=seed, max_shards=4))
     rt.start(fn, 24, timeout=90)
     _wait_clock(rt, 5)
     sid = rt.add_shard()
@@ -102,9 +102,9 @@ def test_membership_all_transports(transport):
     seed = 0
     n_clocks = 22
     plan = MembershipPlan.parse([(4, "add", 2), (10, "remove", 0)])
-    rt = PSRuntime(4, policies.ssp(2), x0(), n_shards=2,
+    rt = PSRuntime(RuntimeConfig(4, policies.ssp(2), x0(), n_shards=2,
                    threads_per_process=2, seed=seed, max_shards=3,
-                   transport=transport, membership_plan=plan)
+                   transport=transport, membership_plan=plan))
     st = rt.run(det_fn(seed), n_clocks, timeout=110)
     assert st.violations == [], st.violations[:5]
     assert [r for _, r in plan.results] == ["ok", "ok"], plan.results
@@ -136,8 +136,8 @@ def test_shrink_to_one_shard_and_reactivate():
     and the seeded frontier markers must keep the clock bound live across
     the re-activation."""
     seed = 5
-    rt = PSRuntime(2, policies.ssp(1), x0(), n_shards=3,
-                   threads_per_process=1, seed=seed, max_shards=3)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(1), x0(), n_shards=3,
+                   threads_per_process=1, seed=seed, max_shards=3))
     rt.start(det_fn(seed), 30, timeout=90)
     _wait_clock(rt, 4)
     rt.remove_shard(0)
@@ -157,8 +157,8 @@ def test_shrink_to_one_shard_and_reactivate():
 
 
 def test_membership_op_validation():
-    rt = PSRuntime(2, policies.ssp(1), x0(), n_shards=2, seed=0,
-                   max_shards=3)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(1), x0(), n_shards=2, seed=0,
+                   max_shards=3))
     with pytest.raises(RuntimeError, match="running"):
         rt.add_shard()                    # not started yet
     rt.start(det_fn(0), 12, timeout=60)
@@ -182,7 +182,7 @@ def test_membership_op_validation():
 
 def test_max_shards_validation():
     with pytest.raises(ValueError, match="max_shards"):
-        PSRuntime(2, policies.bsp(), x0(), n_shards=3, max_shards=2)
+        PSRuntime(RuntimeConfig(2, policies.bsp(), x0(), n_shards=3, max_shards=2))
 
 
 # ---------------------------------------------------------------------------
@@ -199,8 +199,8 @@ def test_serving_slo_honored_across_membership_change():
     replica equals the master bitwise — the in-stream re-bootstrap made the
     migrated rows exact."""
     seed = 9
-    rt = PSRuntime(4, policies.ssp(3), x0(), n_shards=2,
-                   threads_per_process=2, seed=seed, max_shards=3)
+    rt = PSRuntime(RuntimeConfig(4, policies.ssp(3), x0(), n_shards=2,
+                   threads_per_process=2, seed=seed, max_shards=3))
     rt.start(det_fn(seed), 60, timeout=110)
     gw = ReadGateway(rt, n_replicas=2, transport="queue")
     bad = []
@@ -254,8 +254,8 @@ def test_snapshot_during_membership_reflects_current_partition():
     from repro.runtime import snapshot_params, validate_vcs
 
     seed = 11
-    rt = PSRuntime(2, policies.ssp(2), x0(), n_shards=2,
-                   threads_per_process=1, seed=seed, max_shards=3)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(2), x0(), n_shards=2,
+                   threads_per_process=1, seed=seed, max_shards=3))
     rt.start(det_fn(seed), 20, timeout=90)
     _wait_clock(rt, 4)
     rt.add_shard()
@@ -269,7 +269,7 @@ def test_snapshot_during_membership_reflects_current_partition():
     for k, ref in expected_final(seed, 2, 20).items():
         np.testing.assert_array_equal(params[k].reshape(ref.shape), ref)
     # restorable into a different shard count (re-partition path)
-    rt2 = PSRuntime(2, policies.bsp(), x0(), n_shards=4, restore_from=snap)
+    rt2 = PSRuntime(RuntimeConfig(2, policies.bsp(), x0(), n_shards=4, restore_from=snap))
     for k, ref in expected_final(seed, 2, 20).items():
         np.testing.assert_array_equal(rt2.master_value(k).reshape(ref.shape),
                                       ref)

@@ -1,0 +1,214 @@
+"""Unified metrics surface + RuntimeConfig redesign (PR 7).
+
+Three claims under test:
+
+* **Exact reconciliation** — the metrics tree is not a sampled
+  approximation once the run quiesces: after ``wait()``,
+  ``rt.metrics()`` totals equal the authoritative counters exactly —
+  ``run.n_updates`` == the merged ``RunStats``, the per-process boundary
+  snapshots (piggybacked on :class:`ClockMsg` over queue / shm / tcp
+  alike) sum to the same total, and the per-shard ``applied_parts``
+  audit lists match ``rt._parts_sent`` element-wise (zero lost or
+  duplicated update parts).
+
+* **RuntimeConfig is the construction surface** — every validation check
+  lives in ``__post_init__``; the legacy positional/kwargs constructor
+  still works but warns ``DeprecationWarning``; mixing a config with
+  extra args is a ``TypeError``.
+
+* **Gateway read cache never serves staler than requested** — a cached
+  value's stamp is re-measured against the *live* master vector clock on
+  every hit, so an advanced frontier invalidates the entry naturally and
+  the final read always reflects the final master state.
+"""
+import numpy as np
+import pytest
+
+from repro.core import policies
+from repro.runtime import (FRESH, PSRuntime, ReadGateway, ReadShedError,
+                           RuntimeConfig, RuntimeMetrics)
+
+
+def _x0():
+    return {"a": np.zeros((8, 4)), "b": np.ones(6)}
+
+
+def _fn(seed):
+    def fn(w, clock, view, rng):
+        r = np.random.default_rng((seed, w, clock))
+        return {"a": r.integers(-2, 3, size=(8, 4)).astype(float),
+                "b": r.integers(-2, 3, size=6).astype(float)}
+    return fn
+
+
+def _run(transport, n_workers=2, n_clocks=8, **kw):
+    rt = PSRuntime(RuntimeConfig(n_workers, policies.ssp(2), _x0(),
+                                 n_shards=2, transport=transport, **kw))
+    rt.start(_fn(7), n_clocks, timeout=60.0)
+    stats = rt.wait()
+    return rt, stats
+
+
+# ---------------------------------------------------------------------------
+# exact reconciliation: metrics totals == authoritative counters
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["queue", "shm", "tcp"])
+def test_metrics_reconcile_exactly_after_quiesce(transport):
+    n_workers, n_clocks = 2, 8
+    rt, stats = _run(transport, n_workers, n_clocks)
+    m = rt.metrics()
+    assert isinstance(m, RuntimeMetrics)
+    assert m.transport == rt.transport_kind
+    assert m.metrics_enabled
+
+    # run counters: the unified tree equals the merged RunStats exactly
+    assert m.run.n_updates == stats.n_updates == n_workers * n_clocks * 2
+    assert m.run.n_violations == len(stats.violations) == 0
+    assert m.run.bytes_sent == stats.bytes_sent
+
+    # per-process boundary snapshots arrived from every client (over the
+    # same channel/pipe machinery the ClockMsgs already ride) and their
+    # final boundary covers the whole run
+    assert sorted(p.process for p in m.processes) == list(range(rt.n_proc))
+    assert all(p.clock == n_clocks - 1 for p in m.processes)
+    assert sum(p.n_updates for p in m.processes) == stats.n_updates
+
+    # per-shard audit: metrics' applied_parts mirror the zero-lost /
+    # zero-duplicated counter audit element-wise
+    applied = np.zeros(rt.n_proc, dtype=np.int64)
+    for s in m.shards:
+        applied += np.asarray(s.applied_parts, dtype=np.int64)
+    assert applied.tolist() == rt._parts_sent.tolist()
+    assert sum(s.parts_applied for s in m.shards) == int(rt._parts_sent.sum())
+    assert sum(s.rows_applied for s in m.shards) > 0
+    assert sum(s.bytes_applied for s in m.shards) > 0
+
+    # membership/snapshot corners of the tree populate sanely
+    assert m.membership.active == rt.partition.active
+    assert m.membership.n_slots == rt.n_slots
+    assert m.clock == n_clocks
+    assert m.replicas == [] and m.gateways == []
+
+
+def test_metrics_windowed_rates_and_imbalance():
+    rt, stats = _run("queue")
+    m1 = rt.metrics()                    # window since start: work happened
+    assert m1.window_s > 0
+    assert sum(s.updates_per_s for s in m1.shards) > 0
+    assert m1.shard_imbalance() >= 1.0
+    assert m1.hottest_shard().rows_per_s >= m1.coldest_shard().rows_per_s
+    m2 = rt.metrics()                    # quiesced window: rates decay to 0
+    assert sum(s.updates_per_s for s in m2.shards) == 0.0
+    assert m2.run.n_updates == m1.run.n_updates == stats.n_updates
+
+
+def test_metrics_disabled_still_collects_quiesced_truth():
+    rt, stats = _run("queue", metrics=False)
+    m = rt.metrics()
+    assert not m.metrics_enabled
+    assert m.processes == []             # no piggybacked boundary snapshots
+    assert m.run.n_updates == stats.n_updates    # stats remain authoritative
+    applied = np.zeros(rt.n_proc, dtype=np.int64)
+    for s in m.shards:
+        applied += np.asarray(s.applied_parts, dtype=np.int64)
+    assert applied.tolist() == rt._parts_sent.tolist()
+
+
+# ---------------------------------------------------------------------------
+# RuntimeConfig: the one construction surface
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_constructor_warns_and_matches_config():
+    with pytest.deprecated_call():
+        rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
+                       transport="queue", seed=3)
+    cfg = rt.config
+    assert isinstance(cfg, RuntimeConfig)
+    assert (cfg.n_workers, cfg.n_shards, cfg.transport, cfg.seed) == (
+        2, 2, "queue", 3)
+    assert cfg.metrics and cfg.snapshot_every == 0    # defaults fill in
+
+
+def test_config_plus_extra_args_is_a_type_error():
+    cfg = RuntimeConfig(2, policies.ssp(1), _x0())
+    with pytest.raises(TypeError, match="RuntimeConfig"):
+        PSRuntime(cfg, 3)
+    with pytest.raises(TypeError, match="RuntimeConfig"):
+        PSRuntime(cfg, transport="tcp")
+
+
+def test_config_validation_lives_in_post_init():
+    with pytest.raises(ValueError, match="transport"):
+        RuntimeConfig(2, policies.ssp(1), _x0(), transport="carrier-pigeon")
+    with pytest.raises(ValueError, match="shard"):
+        RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=0)
+    with pytest.raises(ValueError, match="max_shards"):
+        RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=3, max_shards=2)
+    with pytest.raises(ValueError, match="barrier_reads"):
+        RuntimeConfig(2, policies.ssp(1), _x0(), threads_per_process=2,
+                      barrier_reads=True)
+
+
+def test_legacy_unknown_kwarg_is_a_type_error():
+    with pytest.raises(TypeError, match="unexpected"):
+        with pytest.warns(DeprecationWarning):
+            PSRuntime(2, policies.ssp(1), _x0(), such_knob=True)
+
+
+# ---------------------------------------------------------------------------
+# gateway read cache: never staler than requested
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.serving
+def test_gateway_cache_never_staler_than_requested():
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(2), _x0(), n_shards=2))
+    rt.start(_fn(11), 12, timeout=60.0)
+    gw = ReadGateway(rt, n_replicas=1, read_cache=True)
+    try:
+        seen = []
+        while rt.running and rt.completed_clock() < 12:
+            for slo in (0, 1, None):
+                res = gw.read("a", slo=slo, timeout=10.0)
+                if isinstance(slo, int):
+                    assert res.staleness <= slo, (res.source, res.staleness)
+                seen.append(res.source)
+        rt.wait()
+        # the frontier advanced since every mid-run cache fill, so a final
+        # slo=0 read must reflect the final master state, not a stale entry
+        final = gw.read("a", slo=0, timeout=10.0)
+        np.testing.assert_array_equal(
+            final.value, rt.master_value("a").reshape(final.value.shape))
+        assert final.staleness == 0
+        # and now the cache can serve it: hit, stamped 0 against the live vc
+        hit = gw.read("a", slo=0, timeout=10.0)
+        assert hit.source == "cache" and hit.staleness == 0
+        np.testing.assert_array_equal(hit.value, final.value)
+        m = rt.metrics()
+        assert m.gateways[0].n_cache_hits == gw.stats.n_cache_hits >= 1
+        assert m.gateways[0].reads_by_slo.get("0", 0) >= 2
+    finally:
+        gw.close()
+
+
+@pytest.mark.serving
+def test_gateway_shed_fresh_admission():
+    rt, _ = _run("queue")
+    gw = ReadGateway(rt, n_replicas=1, read_cache=False)
+    try:
+        gw.set_shed_fresh(True)
+        with pytest.raises(ReadShedError):
+            gw.read("a", slo=FRESH)
+        res = gw.read("a", slo=1)            # bounded reads still admitted
+        assert res.staleness <= 1
+        gw.set_shed_fresh(False)
+        assert gw.read("a", slo=FRESH).source == "master"
+        m = rt.metrics()
+        assert m.gateways[0].n_shed == 1
+        assert not m.gateways[0].shedding_fresh
+        assert m.gateways[0].reads_by_slo["fresh"] == 2
+    finally:
+        gw.close()

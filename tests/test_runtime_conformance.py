@@ -25,7 +25,7 @@ import numpy as np
 import pytest
 
 from repro.core import AsyncPS, NetworkModel, policies
-from repro.runtime import PSRuntime
+from repro.runtime import PSRuntime, RuntimeConfig
 
 # ---------------------------------------------------------------------------
 # (a) deterministic schedules: runtime final state == simulator final state
@@ -64,8 +64,8 @@ def test_runtime_final_state_equals_simulator(polname, pol, seed):
     sim = AsyncPS(4, pol, _x0(), threads_per_process=2, seed=seed,
                   network=NetworkModel(seed=seed))
     st_sim = sim.run(fn, 12)
-    rt = PSRuntime(4, pol, _x0(), n_shards=2, threads_per_process=2,
-                   seed=seed)
+    rt = PSRuntime(RuntimeConfig(4, pol, _x0(), n_shards=2, threads_per_process=2,
+                   seed=seed))
     st_rt = rt.run(fn, 12, timeout=90)
 
     assert st_sim.violations == [], st_sim.violations
@@ -102,8 +102,8 @@ def test_runtime_final_state_equals_simulator_multiprocess(
     sim = AsyncPS(4, pol, _x0(), threads_per_process=2, seed=seed,
                   network=NetworkModel(seed=seed))
     st_sim = sim.run(fn, 12)
-    rt = PSRuntime(4, pol, _x0(), n_shards=2, threads_per_process=2,
-                   seed=seed, transport=transport)
+    rt = PSRuntime(RuntimeConfig(4, pol, _x0(), n_shards=2, threads_per_process=2,
+                   seed=seed, transport=transport))
     st_rt = rt.run(fn, 12, timeout=90)
 
     assert st_sim.violations == [], st_sim.violations
@@ -147,7 +147,7 @@ def test_stress_invariants_hold_mid_run(polname, pol):
                     "b": rng.normal(0.0, 0.6, size=5)}
 
         x0 = {"a": np.zeros((8, 4)), "b": np.zeros(5)}
-        rt = PSRuntime(4, pol, x0, n_shards=2, threads_per_process=2, seed=11)
+        rt = PSRuntime(RuntimeConfig(4, pol, x0, n_shards=2, threads_per_process=2, seed=11))
         st = rt.run(fn, 200, timeout=110)
     finally:
         sys.setswitchinterval(old)
@@ -175,8 +175,8 @@ def test_stress_invariants_hold_multiprocess(polname, pol):
                 "b": rng.normal(0.0, 0.6, size=5)}
 
     x0 = {"a": np.zeros((8, 4)), "b": np.zeros(5)}
-    rt = PSRuntime(4, pol, x0, n_shards=2, threads_per_process=2, seed=11,
-                   transport="proc")
+    rt = PSRuntime(RuntimeConfig(4, pol, x0, n_shards=2, threads_per_process=2, seed=11,
+                   transport="proc"))
     st = rt.run(fn, 80, timeout=110)
 
     assert st.violations == [], st.violations[:5]
@@ -195,8 +195,8 @@ def test_live_master_reads_multiprocess():
         return {"a": np.ones((8, 4))}
 
     x0 = {"a": np.zeros((8, 4))}
-    rt = PSRuntime(2, policies.ssp(3), x0, n_shards=2,
-                   threads_per_process=1, seed=0, transport="proc")
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(3), x0, n_shards=2,
+                   threads_per_process=1, seed=0, transport="proc"))
     rt.start(fn, 50, timeout=90)
     seen = []
     while rt.running and len(seen) < 2000:
@@ -266,8 +266,8 @@ def test_live_reads_under_concurrent_updates():
         return {"a": np.ones((8, 4))}
 
     x0 = {"a": np.zeros((8, 4))}
-    rt = PSRuntime(2, policies.ssp(3), x0, n_shards=2,
-                   threads_per_process=1, seed=0)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(3), x0, n_shards=2,
+                   threads_per_process=1, seed=0))
     rt.start(fn, 50, timeout=60)
     seen = []
     while rt.running and len(seen) < 1000:
@@ -296,8 +296,8 @@ def test_runtime_final_state_with_ps_kernels(polname, pol):
     sim = AsyncPS(4, pol, _x0(), threads_per_process=2, seed=seed,
                   network=NetworkModel(seed=seed))
     st_sim = sim.run(fn, 12)
-    rt = PSRuntime(4, pol, _x0(), n_shards=2, threads_per_process=2,
-                   seed=seed, ps_kernels=True)
+    rt = PSRuntime(RuntimeConfig(4, pol, _x0(), n_shards=2, threads_per_process=2,
+                   seed=seed, ps_kernels=True))
     st_rt = rt.run(fn, 12, timeout=90)
 
     assert st_sim.violations == [] and st_rt.violations == []
@@ -323,9 +323,9 @@ def test_multiprocess_shm_zero_copy_and_kernels(polname, pol, zero_copy):
     sim = AsyncPS(4, pol, _x0(), threads_per_process=2, seed=seed,
                   network=NetworkModel(seed=seed))
     st_sim = sim.run(fn, 12)
-    rt = PSRuntime(4, pol, _x0(), n_shards=2, threads_per_process=2,
+    rt = PSRuntime(RuntimeConfig(4, pol, _x0(), n_shards=2, threads_per_process=2,
                    seed=seed, transport="shm", zero_copy=zero_copy,
-                   ps_kernels=True)
+                   ps_kernels=True))
     st_rt = rt.run(fn, 12, timeout=90)
 
     assert st_sim.violations == [] and st_rt.violations == []
@@ -353,8 +353,8 @@ def test_final_state_with_interpret_mode_pallas(monkeypatch):
         sim = AsyncPS(2, pol, x0, threads_per_process=1, seed=seed,
                       network=NetworkModel(seed=seed))
         sim.run(fn, 4)
-        rt = PSRuntime(2, pol, x0, n_shards=1, threads_per_process=1,
-                       seed=seed, ps_kernels=True)
+        rt = PSRuntime(RuntimeConfig(2, pol, x0, n_shards=1, threads_per_process=1,
+                       seed=seed, ps_kernels=True))
         st = rt.run(fn, 4, timeout=90)
         assert st.violations == []
         for k, ref in sim.views[0].items():
@@ -378,7 +378,7 @@ def test_fully_delivered_subtracts_exactly_sub_epsilon():
 
     tiny = 2.0 ** -44                   # exact power of two, far below 1e-12
     x0 = {"a": np.zeros((4, 2))}
-    rt = PSRuntime(1, policies.vap(1.0), x0, n_shards=1)
+    rt = PSRuntime(RuntimeConfig(1, policies.vap(1.0), x0, n_shards=1))
     proc = rt.procs[0]
     rows = np.arange(2)
     acc = proc.unsynced[0]["a"]
@@ -409,8 +409,8 @@ def test_vap_sub_epsilon_deltas_end_to_end(transport):
                   network=NetworkModel(seed=seed))
     sim.run(fn, 10)
     kw = {} if transport == "queue" else {"transport": transport}
-    rt = PSRuntime(4, pol, x0, n_shards=2, threads_per_process=2,
-                   seed=seed, **kw)
+    rt = PSRuntime(RuntimeConfig(4, pol, x0, n_shards=2, threads_per_process=2,
+                   seed=seed, **kw))
     st = rt.run(fn, 10, timeout=90)
     assert st.violations == []
     for k, ref in sim.views[0].items():

@@ -16,7 +16,7 @@ import numpy as np
 import pytest
 
 from repro.core import policies
-from repro.runtime import FRESH, PSRuntime, ReadGateway
+from repro.runtime import FRESH, PSRuntime, ReadGateway, RuntimeConfig
 from repro.runtime.serving import ReplicaSet
 
 pytestmark = pytest.mark.serving
@@ -52,7 +52,7 @@ def test_slo_honored_under_free_interleaving(polname, pol):
     """4 free-running workers, 200 clocks; the gateway serves a rotating
     mix of SLOs the whole run and every response's *measured* staleness —
     stamped against the live master vector clock — obeys the request."""
-    rt = PSRuntime(4, pol, _x0(), n_shards=2, threads_per_process=2, seed=7)
+    rt = PSRuntime(RuntimeConfig(4, pol, _x0(), n_shards=2, threads_per_process=2, seed=7))
     rt.start(_fn(), 200, timeout=110)
     gw = ReadGateway(rt, n_replicas=2, transport="queue")
     slos = itertools.cycle([0, 2, 5, None])
@@ -95,8 +95,8 @@ def test_slo_honored_under_free_interleaving(polname, pol):
 def test_gateway_serves_over_transport(serving):
     """Two replicas fed over the given transport both serve reads; stamps
     obey the SLO mid-run and the replicas converge to the master exactly."""
-    rt = PSRuntime(4, policies.ssp(3), _x0(), n_shards=2,
-                   threads_per_process=2, seed=3)
+    rt = PSRuntime(RuntimeConfig(4, policies.ssp(3), _x0(), n_shards=2,
+                   threads_per_process=2, seed=3))
     rt.start(_fn(pause=0.002), 60, timeout=90)
     gw = ReadGateway(rt, n_replicas=2, transport=serving)
     try:
@@ -123,8 +123,8 @@ def test_gateway_serves_over_transport(serving):
 def test_serving_over_multiprocess_runtime():
     """Forked clients over shm rings *and* a shm-fed replica tier: the
     write path and the read path share the transport machinery end to end."""
-    rt = PSRuntime(2, policies.ssp(3), _x0(), n_shards=2,
-                   threads_per_process=1, seed=5, transport="proc")
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(3), _x0(), n_shards=2,
+                   threads_per_process=1, seed=5, transport="proc"))
     rt.start(_fn(pause=0.002), 40, timeout=120)
     gw = ReadGateway(rt, n_replicas=2, transport="shm")
     try:
@@ -147,7 +147,7 @@ def test_serving_over_multiprocess_runtime():
 
 
 def test_fresh_reads_escalate_to_master():
-    rt = PSRuntime(2, policies.ssp(2), _x0(), n_shards=2, seed=1)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(2), _x0(), n_shards=2, seed=1))
     rt.start(_fn(pause=0.002), 30, timeout=60)
     gw = ReadGateway(rt, n_replicas=1, transport="queue")
     try:
@@ -168,7 +168,7 @@ def test_unattainable_slo_escalates_to_master():
     """A replica pinned behind the master frontier cannot satisfy slo=0:
     the gateway parks on the doorbell, hits the deadline, and escalates —
     the response is the master value, stamped staleness 0."""
-    rt = PSRuntime(2, policies.ssp(2), _x0(), n_shards=2, seed=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(2), _x0(), n_shards=2, seed=2))
     # subscribe before start: the shards process the Subscribe when their
     # threads come up, and the replica ingests the whole run
     gw = ReadGateway(rt, n_replicas=1, transport="queue")
@@ -199,8 +199,8 @@ def test_replica_joins_mid_run_equals_master_at_quiesce():
     """A replica added mid-run — warm-started from the latest periodic
     snapshot, corrected by the shards' in-stream bootstrap states — holds
     exactly the master state once the runtime quiesces."""
-    rt = PSRuntime(4, policies.ssp(3), _x0(), n_shards=2,
-                   threads_per_process=2, seed=9, snapshot_every=5)
+    rt = PSRuntime(RuntimeConfig(4, policies.ssp(3), _x0(), n_shards=2,
+                   threads_per_process=2, seed=9, snapshot_every=5))
     rt.start(_fn(pause=0.002), 40, timeout=120)
     gw = ReadGateway(rt, n_replicas=1, transport="queue")
     try:
@@ -239,7 +239,7 @@ def test_poisoned_replica_leaves_the_rotation():
     """A replica whose ingest raised can no longer guarantee its vector
     clock covers its values: the gateway must never route to it again
     (values would be stamped fresher than they are)."""
-    rt = PSRuntime(2, policies.ssp(2), _x0(), n_shards=2, seed=4)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(2), _x0(), n_shards=2, seed=4))
     gw = ReadGateway(rt, n_replicas=2, transport="queue")
     rt.run(_fn(), 6, timeout=60)
     try:
@@ -269,7 +269,7 @@ def test_poisoned_replica_leaves_the_rotation():
 
 
 def test_gateway_rejects_bad_slo_and_transport():
-    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.bsp(), _x0(), n_shards=2))
     with pytest.raises(ValueError, match="serving transport"):
         ReplicaSet(rt, 1, transport="carrier-pigeon")
     with pytest.raises(ValueError, match="replica"):
@@ -297,8 +297,8 @@ def test_wedged_replica_never_stalls_publish_and_resyncs():
         time.sleep(1e-3)
         return {"a": rng.normal(0.0, 0.6, size=(8, 4))}
 
-    rt = PSRuntime(2, policies.ssp(3), {"a": np.zeros((8, 4))}, n_shards=2,
-                   seed=0)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(3), {"a": np.zeros((8, 4))}, n_shards=2,
+                   seed=0))
     rt.start(fn, 400, timeout=110)
     rset = ReplicaSet(rt, n_replicas=2, transport="shm", ring_capacity=1)
     try:

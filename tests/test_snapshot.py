@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.core import AsyncPS, NetworkModel, policies
-from repro.runtime import PSRuntime, load_snapshot, save_snapshot, snapshot_params
+from repro.runtime import PSRuntime, RuntimeConfig, load_snapshot, save_snapshot, snapshot_params
 
 
 def _x0():
@@ -31,13 +31,13 @@ def test_snapshot_resume_equals_uninterrupted_run():
                   network=NetworkModel(seed=0))
     sim.run(_sched_fn(0), 12)
 
-    rt_a = PSRuntime(4, policies.ssp(2), _x0(), n_shards=2,
-                     threads_per_process=2, seed=0)
+    rt_a = PSRuntime(RuntimeConfig(4, policies.ssp(2), _x0(), n_shards=2,
+                     threads_per_process=2, seed=0))
     rt_a.run(_sched_fn(0), 6, timeout=60)
     snap = rt_a.snapshot()
 
-    rt_b = PSRuntime(4, policies.ssp(2), _x0(), n_shards=2,
-                     threads_per_process=2, seed=0, restore_from=snap)
+    rt_b = PSRuntime(RuntimeConfig(4, policies.ssp(2), _x0(), n_shards=2,
+                     threads_per_process=2, seed=0, restore_from=snap))
     st = rt_b.run(_sched_fn(0, shift=6), 6, timeout=60)
     assert st.violations == []
     for k, ref in sim.views[0].items():
@@ -46,7 +46,7 @@ def test_snapshot_resume_equals_uninterrupted_run():
 
 
 def test_snapshot_file_roundtrip(tmp_path):
-    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.bsp(), _x0(), n_shards=2))
     rt.run(_sched_fn(1), 4, timeout=60)
     snap = rt.snapshot()
     path = tmp_path / "shards.npz"
@@ -67,11 +67,11 @@ def test_snapshot_file_roundtrip(tmp_path):
 
 def test_killed_shard_rejoins_from_snapshot():
     """A replacement shard adopts the snapshot partition via load_state."""
-    rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=2))
     rt.run(_sched_fn(2), 5, timeout=60)
     snap = rt.snapshot()
 
-    rt2 = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2)
+    rt2 = PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=2))
     for key in rt2.shards[1].dense:           # "the shard process was killed"
         rt2.shards[1].dense[key][...] = np.nan
     rt2.shards[0].load_state(snap["shards"][0])
@@ -83,37 +83,37 @@ def test_killed_shard_rejoins_from_snapshot():
 def test_restore_repartitions_across_different_n_shards():
     """restore_from reassembles the master, so the shard count may change
     between the killed and the resumed server."""
-    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.bsp(), _x0(), n_shards=2))
     rt.run(_sched_fn(3), 4, timeout=60)
     snap = rt.snapshot()
-    rt3 = PSRuntime(3, policies.bsp(), _x0(), n_shards=3,
-                    threads_per_process=1, restore_from=snap)
+    rt3 = PSRuntime(RuntimeConfig(3, policies.bsp(), _x0(), n_shards=3,
+                    threads_per_process=1, restore_from=snap))
     for k in ("a", "b"):
         np.testing.assert_array_equal(rt3.master_value(k), rt.master_value(k))
 
 
 def test_restore_rejects_mismatched_shapes_and_keys():
-    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.bsp(), _x0(), n_shards=2))
     rt.run(_sched_fn(4), 2, timeout=60)
     snap = rt.snapshot()
     with pytest.raises(ValueError, match="keys"):
-        PSRuntime(2, policies.bsp(), {"a": np.zeros((8, 4))}, n_shards=2,
-                  restore_from=snap)
+        PSRuntime(RuntimeConfig(2, policies.bsp(), {"a": np.zeros((8, 4))}, n_shards=2,
+                  restore_from=snap))
     with pytest.raises(ValueError, match="shape"):
-        PSRuntime(2, policies.bsp(),
+        PSRuntime(RuntimeConfig(2, policies.bsp(),
                   {"a": np.zeros((8, 5)), "b": np.zeros(5)}, n_shards=2,
-                  restore_from=snap)
+                  restore_from=snap))
     bad = {**snap, "version": 99}
     with pytest.raises(ValueError, match="version"):
-        PSRuntime(2, policies.bsp(), _x0(), n_shards=2, restore_from=bad)
+        PSRuntime(RuntimeConfig(2, policies.bsp(), _x0(), n_shards=2, restore_from=bad))
 
 
 def test_periodic_snapshots_on_clock_boundaries(tmp_path):
     """PSRuntime(snapshot_every=k): the shard thread that moves the applied
     frontier across a multiple of k takes a snapshot (boundary-triggered),
     stamps it with the per-shard vector clocks, and persists it."""
-    rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2, seed=6,
-                   snapshot_every=3, snapshot_dir=str(tmp_path))
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=2, seed=6,
+                   snapshot_every=3, snapshot_dir=str(tmp_path)))
     st = rt.run(_sched_fn(6), 9, timeout=60)
     assert st.violations == []
     clocks = [c for c, _ in rt.snapshots]
@@ -134,13 +134,13 @@ def test_periodic_snapshots_on_clock_boundaries(tmp_path):
         np.testing.assert_array_equal(vc_disk, vc_mem)
     assert loaded["clock"] == 9 and loaded["n_proc"] == 2
     # a periodic snapshot is restorable like any other
-    rt2 = PSRuntime(2, policies.ssp(1), _x0(), n_shards=3, restore_from=latest)
+    rt2 = PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=3, restore_from=latest))
     for k in ("a", "b"):
         np.testing.assert_array_equal(rt2.master_value(k), rt.master_value(k))
 
 
 def test_shard_load_state_rejects_wrong_partition():
-    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.bsp(), _x0(), n_shards=2))
     snap = rt.snapshot()
     with pytest.raises(ValueError, match="partition"):
         rt.shards[0].load_state(snap["shards"][1])
@@ -153,11 +153,11 @@ def test_shard_load_state_rejects_wrong_partition():
 
 def test_restore_shrinks_to_one_shard():
     """Everything funnels onto a single shard: the degenerate partition."""
-    rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=3)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=3))
     rt.run(_sched_fn(7), 4, timeout=60)
     snap = rt.snapshot()
-    rt1 = PSRuntime(2, policies.ssp(1), _x0(), n_shards=1,
-                    restore_from=snap)
+    rt1 = PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=1,
+                    restore_from=snap))
     for k in ("a", "b"):
         np.testing.assert_array_equal(rt1.master_value(k), rt.master_value(k))
     # and the shrunken runtime still runs clean
@@ -168,11 +168,11 @@ def test_restore_shrinks_to_one_shard():
 def test_restore_grows_with_empty_key_ranges():
     """8 shards for a 5-row key: three shards own zero rows of "b" — empty
     dense blocks must restore, apply, snapshot, and read back cleanly."""
-    rt = PSRuntime(2, policies.bsp(), _x0(), n_shards=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.bsp(), _x0(), n_shards=2))
     rt.run(_sched_fn(8), 4, timeout=60)
     snap = rt.snapshot()
-    rt8 = PSRuntime(2, policies.bsp(), _x0(), n_shards=8,
-                    restore_from=snap)
+    rt8 = PSRuntime(RuntimeConfig(2, policies.bsp(), _x0(), n_shards=8,
+                    restore_from=snap))
     assert sum(rt8.partition.rows_of("b", s).size for s in range(8)) == 5
     assert any(rt8.partition.rows_of("b", s).size == 0 for s in range(8))
     for k in ("a", "b"):
@@ -192,13 +192,13 @@ def test_restore_under_different_n_proc():
     (conservative_vc falls back to the all -1 vector clock)."""
     from repro.runtime import conservative_vc
 
-    rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
-                   threads_per_process=1)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=2,
+                   threads_per_process=1))
     rt.run(_sched_fn(9), 5, timeout=60)
     snap = rt.snapshot()
     assert snap["n_proc"] == 2
-    rt3 = PSRuntime(3, policies.ssp(1), _x0(), n_shards=2,
-                    threads_per_process=1, restore_from=snap)
+    rt3 = PSRuntime(RuntimeConfig(3, policies.ssp(1), _x0(), n_shards=2,
+                    threads_per_process=1, restore_from=snap))
     assert rt3.n_proc == 3
     for k in ("a", "b"):
         np.testing.assert_array_equal(rt3.master_value(k), rt.master_value(k))
@@ -212,32 +212,32 @@ def test_tampered_vc_snapshot_refused():
     """A snapshot whose vector-clock stamps were corrupted must be refused
     with a clear error — a bad vc would let a serving replica stamp stale
     values as fresh."""
-    rt = PSRuntime(2, policies.ssp(1), _x0(), n_shards=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=2))
     rt.run(_sched_fn(10), 4, timeout=60)
     snap = rt.snapshot()
 
     wrong_shape = {**snap, "clock_vcs": [vc[:1] for vc in snap["clock_vcs"]]}
     with pytest.raises(ValueError, match="malformed"):
-        PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
-                  restore_from=wrong_shape)
+        PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=2,
+                  restore_from=wrong_shape))
 
     wrong_dtype = {**snap,
                    "clock_vcs": [vc.astype(float) for vc in snap["clock_vcs"]]}
     with pytest.raises(ValueError, match="malformed"):
-        PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
-                  restore_from=wrong_dtype)
+        PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=2,
+                  restore_from=wrong_dtype))
 
     huge = [vc.copy() for vc in snap["clock_vcs"]]
     huge[0][0] = 1 << 50
     with pytest.raises(ValueError, match="tampered"):
-        PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
-                  restore_from={**snap, "clock_vcs": huge})
+        PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=2,
+                  restore_from={**snap, "clock_vcs": huge}))
 
     off_by_one = [vc + 1 for vc in snap["clock_vcs"]]   # frontier shifted:
     # the stamped clock no longer matches the vcs' implied frontier
     with pytest.raises(ValueError, match="contradicts"):
-        PSRuntime(2, policies.ssp(1), _x0(), n_shards=2,
-                  restore_from={**snap, "clock_vcs": off_by_one})
+        PSRuntime(RuntimeConfig(2, policies.ssp(1), _x0(), n_shards=2,
+                  restore_from={**snap, "clock_vcs": off_by_one}))
 
     # the same validation guards the serving-tier bootstrap path
     from repro.runtime import conservative_vc

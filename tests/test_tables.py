@@ -55,10 +55,10 @@ def test_server_partition_covers_every_row_exactly_once(n_servers):
 def test_server_partition_matches_runtime_sharding():
     """The runtime's shard-row assignment is the same rule as
     Table.server_partition — one partitioning scheme everywhere."""
-    from repro.runtime import PSRuntime
+    from repro.runtime import PSRuntime, RuntimeConfig
     from repro.core import policies
 
-    rt = PSRuntime(2, policies.bsp(), {"a": np.zeros((7, 3))}, n_shards=3)
+    rt = PSRuntime(RuntimeConfig(2, policies.bsp(), {"a": np.zeros((7, 3))}, n_shards=3))
     t = Table("a", n_cols=3)
     for r in range(7):
         t.inc(r, np.zeros(3))

@@ -238,15 +238,15 @@ def test_vap_acks_coalesce_into_batched_frames():
     well below the acked-update count (clock-only policies skip acks
     entirely, so the cycle only exists under a value bound)."""
     from repro.core import policies
-    from repro.runtime import PSRuntime
+    from repro.runtime import PSRuntime, RuntimeConfig
 
     x0 = {f"k{i}": np.zeros(4) for i in range(6)}
 
     def fn(w, clock, view, rng):
         return {k: rng.normal(size=4) for k in x0}
 
-    rt = PSRuntime(2, policies.vap(1e6), x0, n_shards=2,
-                   threads_per_process=1, seed=0)
+    rt = PSRuntime(RuntimeConfig(2, policies.vap(1e6), x0, n_shards=2,
+                   threads_per_process=1, seed=0))
     st = rt.run(fn, 30, timeout=60)
     assert st.violations == []
     # every delivered part is acked exactly once...
@@ -258,9 +258,9 @@ def test_vap_acks_coalesce_into_batched_frames():
 
 def test_clock_only_policies_send_no_acks():
     from repro.core import policies
-    from repro.runtime import PSRuntime
+    from repro.runtime import PSRuntime, RuntimeConfig
 
-    rt = PSRuntime(2, policies.ssp(2), {"a": np.zeros((4, 2))}, n_shards=2)
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(2), {"a": np.zeros((4, 2))}, n_shards=2))
     st = rt.run(lambda w, c, v, r: {"a": np.ones((4, 2))}, 10, timeout=60)
     assert st.violations == []
     assert st.n_ack_msgs == 0 and st.n_acked_updates == 0
@@ -288,10 +288,10 @@ def test_serving_shm_refuses_weakly_ordered_isa(monkeypatch):
     import platform
 
     from repro.core import policies
-    from repro.runtime import PSRuntime
+    from repro.runtime import PSRuntime, RuntimeConfig
     from repro.runtime.serving import ReplicaSet
 
-    rt = PSRuntime(1, policies.ssp(1), {"a": np.zeros(4)}, n_shards=1)
+    rt = PSRuntime(RuntimeConfig(1, policies.ssp(1), {"a": np.zeros(4)}, n_shards=1))
     monkeypatch.setattr(platform, "machine", lambda: "aarch64")
     with pytest.raises(RuntimeError, match=r'transport="tcp"'):
         ReplicaSet(rt, 1, transport="shm")
@@ -301,9 +301,9 @@ def test_runtime_flags_tampered_seq():
     """End-to-end: a frame whose seqs were tampered with on the wire is
     detected by the receiving shard's FIFO assertion."""
     from repro.core import policies
-    from repro.runtime import PSRuntime
+    from repro.runtime import PSRuntime, RuntimeConfig
 
-    rt = PSRuntime(1, policies.ssp(1), {"a": np.zeros((4, 2))}, n_shards=1)
+    rt = PSRuntime(RuntimeConfig(1, policies.ssp(1), {"a": np.zeros((4, 2))}, n_shards=1))
     msgs = [M.UpdateMsg(0, 0, 0, 0, "a", np.arange(1), np.ones((1, 2)))]
     msgs[0].seq = 5                                     # wire says 5, not 0
     shard = rt.shards[0]
@@ -390,14 +390,14 @@ def test_proc_runtime_handles_rows_larger_than_default_ring():
     """A key bigger than the 1 MiB default ring: capacity is sized from the
     largest part, so a whole-key Inc round-trips through the shm backend."""
     from repro.core import policies
-    from repro.runtime import PSRuntime
+    from repro.runtime import PSRuntime, RuntimeConfig
 
     big = (2048, 128)                           # 2 MiB of float64 rows
     def fn(w, clock, view, rng):
         return {"w": np.ones(big)}
 
-    rt = PSRuntime(2, policies.ssp(1), {"w": np.zeros(big)}, n_shards=2,
-                   threads_per_process=1, seed=0, transport="shm")
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(1), {"w": np.zeros(big)}, n_shards=2,
+                   threads_per_process=1, seed=0, transport="shm"))
     st = rt.run(fn, 3, timeout=90)
     assert st.violations == []
     assert float(rt.master_value("w").sum()) == 2 * 3 * big[0] * big[1]
@@ -756,10 +756,10 @@ def test_use_after_advance_guard_through_shard_apply():
     _handle_batch returns, every frame must be released (head advanced) and
     nothing the shard retained may alias ring memory."""
     from repro.core import policies
-    from repro.runtime import PSRuntime
+    from repro.runtime import PSRuntime, RuntimeConfig
 
     x0 = {"k": np.zeros((8, 2)), "k2": np.zeros((8, 2))}
-    rt = PSRuntime(2, policies.vap(1e6), x0, n_shards=1)
+    rt = PSRuntime(RuntimeConfig(2, policies.vap(1e6), x0, n_shards=1))
     shard = rt.shards[0]
     ring, codec, reader, chan, bell = _mk_zero_copy()
     try:
