@@ -1,0 +1,206 @@
+"""Benchmark: the durability tier's hot-path cost (repro.runtime.wal).
+
+One workload, three legs — identical update traffic with the write-ahead
+log off, group-committing without fsync, and fsyncing at every clock
+boundary — plus a recovery-throughput row:
+
+* **off** — ``wal_dir`` unset: the PR-6 apply hot path, the baseline.
+* **group_commit** — ``wal_fsync="none"``: frames are encoded under the
+  shard lock (owned bytes, FIFO-behind the apply) and flushed to the OS
+  page cache once per clock boundary.  This is the intended production
+  configuration; the gate bounds its overhead at <10% of updates/s.
+* **fsync_boundary** — ``wal_fsync="boundary"``: an ``fsync`` per group
+  commit.  Reported, not gated — the cost is the storage stack's, and the
+  A/B against *group_commit* is exactly the durability premium the README
+  "Durability" section trades off.
+* **recovery** — genesis ``recover_to_vc`` over the group-commit leg's
+  log: replayed parts/s (how fast a killed host catches up from disk).
+
+    PYTHONPATH=src python benchmarks/bench_wal.py \
+        [--smoke] [--json BENCH_wal.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import shutil
+import statistics
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import ssp
+from repro.runtime import PSRuntime, RuntimeConfig, recover_to_vc
+
+R, C = 64, 128
+
+
+def _x0():
+    return {"w": np.zeros((R, C))}
+
+
+HOT_ROWS = 8
+
+
+def _fn(w, clock, view, rng):
+    g = rng.normal(0.0, 1.0, size=(R, C))
+    m = rng.normal(0.0, 1.0, size=(R, R)) / 8.0
+    for _ in range(40):                     # per-clock compute
+        g = m @ g
+        g /= max(1.0, float(np.abs(g).max()))
+    # sparse delta — a few hot rows per clock, the paper's motivating
+    # access pattern (topic models / sparse regression); the runtime
+    # elides all-zero rows at flush, so parts carry only these rows
+    d = np.zeros((R, C))
+    hot = rng.choice(R, size=HOT_ROWS, replace=False)
+    d[hot] = 0.01 * g[hot]
+    return {"w": d}
+
+
+def _one_leg(clocks: int, wal_dir: Optional[str],
+             wal_fsync: Optional[str]) -> Dict:
+    rt = PSRuntime(RuntimeConfig(2, ssp(3), _x0(), n_shards=2,
+                                 wal_dir=wal_dir, wal_fsync=wal_fsync))
+    t0 = time.perf_counter()
+    rt.start(_fn, clocks, timeout=600)
+    stats = rt.wait()
+    wall = time.perf_counter() - t0
+    row = {
+        "updates_per_s": stats.n_updates / wall,
+        "clocks_per_s": clocks / wall,
+        "wall_s": wall,
+    }
+    if wal_dir:
+        m = rt.metrics()
+        row["wal_bytes"] = sum(s.wal_bytes for s in m.shards)
+        row["wal_commits"] = sum(s.wal_commits for s in m.shards)
+        row["wal_segments"] = sum(s.wal_segments for s in m.shards)
+        row["wal_fsync_s"] = sum(s.wal_fsync_s for s in m.shards)
+    return row
+
+
+def _recovery_row(wal_dir: str) -> Dict:
+    t0 = time.perf_counter()
+    rec = recover_to_vc(_x0(), wal_dir)
+    wall = time.perf_counter() - t0
+    replayed = int(rec["applied_parts"].sum())
+    return {
+        "name": "wal/recovery_genesis",
+        "replayed_parts": replayed,
+        "parts_per_s": replayed / max(wall, 1e-9),
+        "us_per_call": 1e6 * wall / max(replayed, 1),
+        "wall_s": wall,
+    }
+
+
+_VARIANTS = (("off", None), ("group_commit", "none"),
+             ("fsync_boundary", "boundary"))
+
+
+def run(smoke: bool = False, best_of: int = 5) -> List[Dict]:
+    clocks = 200 if smoke else 400
+    rows: List[Dict] = []
+    tmp = tempfile.mkdtemp(prefix="bench_wal_")
+    try:
+        # interleave the reps (off, gc, fsync / gc, fsync, off / ...) —
+        # rotating the leg order per round so neither leg systematically
+        # inherits the box state its predecessor leaves (fsync's I/O-idle
+        # tail, cache heat) — then take the SECOND-best rep per leg,
+        # robust to a single lucky/unlucky rep in either direction
+        runs: Dict[str, List] = {v: [] for v, _ in _VARIANTS}
+        for i in range(best_of):
+            for j in range(len(_VARIANTS)):
+                variant, fsync = _VARIANTS[(i + j) % len(_VARIANTS)]
+                d = (None if fsync is None
+                     else os.path.join(tmp, f"{variant}_{i}"))
+                runs[variant].append((_one_leg(clocks, d, fsync), d))
+        keep_dir = None
+        for variant, _ in _VARIANTS:
+            ranked = sorted(runs[variant],
+                            key=lambda r: r[0]["updates_per_s"], reverse=True)
+            best, d = ranked[1] if len(ranked) > 1 else ranked[0]
+            best["name"] = f"wal/{variant}"
+            best["us_per_call"] = 1e6 / max(best["updates_per_s"], 1e-9)
+            rows.append(best)
+            if variant == "group_commit":
+                keep_dir = d
+                # the gated number: per-ROUND paired ratio (gc rep i over
+                # off rep i, run back-to-back), median over rounds — pairing
+                # cancels box-level drift that independent per-leg picks
+                # cannot, which is what makes the gate stable on shared CPUs
+                best["overhead_vs_off"] = max(0.0, 1.0 - statistics.median(
+                    g[0]["updates_per_s"] / o[0]["updates_per_s"]
+                    for o, g in zip(runs["off"], runs["group_commit"])))
+        rows.append(_recovery_row(keep_dir))
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+def gates(rows: List[Dict]) -> List[str]:
+    by = {r["name"]: r for r in rows}
+    failed = []
+    off = by["wal/off"]["updates_per_s"]
+    gc = by["wal/group_commit"]["updates_per_s"]
+    fs = by["wal/fsync_boundary"]["updates_per_s"]
+    overhead = by["wal/group_commit"].get(
+        "overhead_vs_off", max(0.0, 1.0 - gc / off))
+    print(f"# wal: off {off:.0f} upd/s, group-commit {gc:.0f} upd/s "
+          f"({overhead * 100:.1f}% overhead, gate <10%), fsync/boundary "
+          f"{fs:.0f} upd/s ({by['wal/fsync_boundary']['wal_fsync_s']:.2f}s "
+          f"in fsync)")
+    print(f"# wal: recovery replays "
+          f"{by['wal/recovery_genesis']['parts_per_s']:.0f} parts/s")
+    if overhead >= 0.10:
+        failed.append(f"wal group-commit overhead {overhead * 100:.1f}% "
+                      f">= 10% of updates/s")
+    return failed
+
+
+def write_json(rows: List[Dict], path: str) -> None:
+    out = {
+        "schema": "bench_wal/v1",
+        "meta": {
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "cpus": os.cpu_count(),
+        },
+        "rows": rows,
+    }
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (shorter runs, same gates)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write consolidated BENCH_wal.json here")
+    args = ap.parse_args()
+
+    rows = run(smoke=args.smoke)
+    for r in rows:
+        if "updates_per_s" in r:
+            print(f"{r['name']}: {r['updates_per_s']:.0f} upd/s")
+        else:
+            print(f"{r['name']}: {r['parts_per_s']:.0f} parts/s replayed")
+    failed = gates(rows)
+    if args.json:
+        write_json(rows, args.json)
+        print(f"# wrote {args.json}")
+    for msg in failed:
+        print(f"# GATE FAILED: {msg}")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

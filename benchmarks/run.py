@@ -81,6 +81,18 @@ def main() -> None:
     bench_autoscale.write_json(as_rows, as_out)
     print(f"# wrote {as_out}")
 
+    print("# --- durability tier: WAL off vs group-commit vs fsync ---")
+    from benchmarks import bench_wal
+    wal_rows = bench_wal.run()
+    for r in wal_rows:
+        all_rows.append(dict(r))
+        print(_csv_line(dict(r)))
+    bench_wal.gates(wal_rows)
+    wal_out = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "BENCH_wal.json")
+    bench_wal.write_json(wal_rows, wal_out)
+    print(f"# wrote {wal_out}")
+
     print("# --- kernel reference-path microbenchmarks ---")
     from benchmarks import bench_kernels
     for r in bench_kernels.run():

@@ -34,12 +34,15 @@ from repro.runtime.runtime import (TRANSPORTS, ClientProcess, PSRuntime,
 from repro.runtime.serving import (FRESH, ReadGateway, ReadResult,
                                    ReadShedError, Replica, ReplicaSet,
                                    SERVING_TRANSPORTS)
-from repro.runtime.shard import ServerShard
+from repro.runtime.shard import ServerShard, UidDedup
 from repro.runtime.snapshot import (conservative_vc, load_snapshot,
-                                    save_snapshot, snapshot_params,
-                                    take_snapshot, validate_vcs)
+                                    recover_to_vc, save_snapshot,
+                                    snapshot_params, take_snapshot,
+                                    validate_vcs)
 from repro.runtime.transport import (FifoAssert, FrameDecoder, ShmRing,
                                      WireChannel, encode_frame, require_tso)
+from repro.runtime.wal import (WalWriter, prune_segments, read_segment,
+                               wal_segments)
 
 __all__ = [
     "AckBatchMsg", "AckMsg", "AutoscaleAction", "AutoscalePolicy",
@@ -55,7 +58,8 @@ __all__ = [
     "RuntimeConfig", "RuntimeMetrics", "RuntimeViewHandle",
     "SERVING_TRANSPORTS", "ServerShard", "ShardFinMsg", "ShardMetrics",
     "ShmRing", "SnapshotMetrics", "SubscribeMsg", "TRANSPORTS",
-    "UnsubscribeMsg", "UpdateMsg", "WireChannel", "conservative_vc",
-    "encode_frame", "load_snapshot", "require_tso", "save_snapshot",
-    "snapshot_params", "take_snapshot", "validate_vcs",
+    "UidDedup", "UnsubscribeMsg", "UpdateMsg", "WalWriter", "WireChannel",
+    "conservative_vc", "encode_frame", "load_snapshot", "prune_segments",
+    "read_segment", "recover_to_vc", "require_tso", "save_snapshot",
+    "snapshot_params", "take_snapshot", "validate_vcs", "wal_segments",
 ]

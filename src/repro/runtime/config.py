@@ -28,6 +28,7 @@ from repro.core.policies import Policy
 from repro.core.server import UpdateMap
 
 TRANSPORTS: Tuple[str, ...] = ("queue", "tcp", "shm", "proc")
+WAL_FSYNC: Tuple[str, ...] = ("none", "boundary")
 
 
 @dataclass
@@ -61,6 +62,18 @@ class RuntimeConfig:
     # in CI by bench_autoscale's A/B row) but can be switched off for
     # apples-to-apples perf comparisons against older baselines.
     metrics: bool = field(default=True)
+    # durability tier (PR 8, repro.runtime.wal): per-shard write-ahead delta
+    # log under wal_dir, group-committed at clock boundaries.  wal_fsync is
+    # "none" (flush to the OS, no fsync between applies — the default) or
+    # "boundary" (fsync per group commit); None means unset and resolves to
+    # "none" when wal_dir is given.  Segments rotate past wal_segment_bytes.
+    wal_dir: Optional[str] = None
+    wal_fsync: Optional[str] = None
+    wal_segment_bytes: int = 1 << 22
+    # snapshot retention: keep only the newest k periodic snapshots on disk
+    # (0 = keep all), pruning WAL segments fully covered by the oldest
+    # retained snapshot along with them.
+    snapshot_keep_last: int = 0
 
     def __post_init__(self) -> None:
         if self.n_workers % self.threads_per_process:
@@ -76,6 +89,24 @@ class RuntimeConfig:
                              f"choose from {TRANSPORTS}")
         if self.snapshot_every < 0:
             raise ValueError("snapshot_every must be >= 0 (0 disables)")
+        if self.snapshot_every and not self.snapshot_dir:
+            raise ValueError(
+                "snapshot_every without snapshot_dir would drop every "
+                "periodic snapshot on the floor at restart; pass "
+                "snapshot_dir= (or set snapshot_every=0)")
+        if self.wal_fsync is not None and not self.wal_dir:
+            raise ValueError("wal_fsync without wal_dir is a silent no-op; "
+                             "pass wal_dir= (or drop wal_fsync)")
+        if self.wal_fsync is not None and self.wal_fsync not in WAL_FSYNC:
+            raise ValueError(f"unknown wal_fsync policy {self.wal_fsync!r}; "
+                             f"choose from {WAL_FSYNC}")
+        if self.wal_segment_bytes < 1:
+            raise ValueError("wal_segment_bytes must be >= 1")
+        if self.snapshot_keep_last < 0:
+            raise ValueError("snapshot_keep_last must be >= 0 (0 keeps all)")
+        if self.snapshot_keep_last and not self.snapshot_dir:
+            raise ValueError("snapshot_keep_last prunes on-disk snapshots; "
+                             "it requires snapshot_dir")
 
 
 def config_from_legacy(*args, **kwargs) -> RuntimeConfig:

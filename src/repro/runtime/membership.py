@@ -264,6 +264,12 @@ class MembershipManager:
         self._await_installs(set(removed), epoch, deadline)
         rt.partition = part
         self.log.append((epoch, part.active))
+        # durability tier: retiring slots already sealed their WAL segments
+        # shard-side at the cut (step 3, stamped with their final vc); the
+        # runtime hook just records the per-slot log positions of this cut
+        hook = getattr(rt, "_wal_on_epoch", None)
+        if hook is not None:
+            hook(epoch, added, removed)
         for fn in self._listeners:
             fn(epoch, part, added, removed)
 

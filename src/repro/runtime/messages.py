@@ -186,6 +186,10 @@ class ReplicaStateMsg:
     state: dict              # {key: {"rows": int64, "values": (n, C)}}
     clock_vc: np.ndarray     # (n_proc,) applied frontier at snapshot point
     seq: int = -1
+    # membership epoch of the cut: the replica stamps the covered rows so
+    # late-arriving older-epoch deltas (already folded into this state by
+    # the migration reassembly) can be recognized and dropped
+    epoch: int = -1
 
 
 @dataclass
@@ -197,6 +201,7 @@ class ReplicaDeltaMsg:
     rows: np.ndarray         # global row ids
     delta: np.ndarray        # (len(rows), C)
     seq: int = -1
+    epoch: int = -1          # membership epoch the publisher applied under
 
     @property
     def nbytes(self) -> int:

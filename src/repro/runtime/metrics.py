@@ -66,6 +66,13 @@ class ShardMetrics:
     publish_lag_s: float          # age of the oldest unpublished cycle
     updates_per_s: float = 0.0    # windowed: parts applied / s
     rows_per_s: float = 0.0       # windowed: row-updates applied / s
+    # durability tier (repro.runtime.wal) — zeros when wal_dir is unset
+    wal_parts: int = 0            # update parts logged (pending + written)
+    wal_commits: int = 0          # group commits (clock boundaries hit)
+    wal_bytes: int = 0            # bytes written to segment files
+    wal_segments: int = 0         # segment files opened by this writer
+    wal_fsync_s: float = 0.0      # cumulative fsync time (policy cost)
+    wal_append_lag_s: float = 0.0 # age of the oldest uncommitted frame
 
 
 @dataclass
@@ -252,6 +259,7 @@ class MetricsHub:
         )
 
     def _collect_shard(self, s, now: float, dt: float) -> ShardMetrics:
+        w = s.wal
         parts = int(s.applied_parts.sum())
         rows = int(s.m_rows_applied)
         try:
@@ -282,6 +290,15 @@ class MetricsHub:
             publish_lag_s=lag,
             updates_per_s=max(0, parts - prev_parts) / dt,
             rows_per_s=max(0, rows - prev_rows) / dt,
+            # wal counters: single-writer (the shard thread), racy reads
+            # here exactly like the other shard counters
+            wal_parts=int(w.parts) if w is not None else 0,
+            wal_commits=int(w.m_commits) if w is not None else 0,
+            wal_bytes=int(w.m_bytes) if w is not None else 0,
+            wal_segments=int(w.m_segments) if w is not None else 0,
+            wal_fsync_s=float(w.m_fsync_s) if w is not None else 0.0,
+            wal_append_lag_s=(float(w.pending_age_s)
+                              if w is not None else 0.0),
         )
 
     def _collect_procs(self, loads: Dict[int, Tuple[int, np.ndarray]],

@@ -636,6 +636,23 @@ class PSRuntime(_WorkerFlowMixin):
         self._snap_lock = threading.Lock()
         self._next_snap_clock = (cfg.snapshot_every if cfg.snapshot_every
                                  else (1 << 62))
+        self.snapshot_keep_last = cfg.snapshot_keep_last
+
+        # durability tier (repro.runtime.wal): per-shard write-ahead delta
+        # log, group-committed at clock boundaries by the shard threads.
+        # The codec is the PR-6 raw wire codec over the same key order the
+        # shm transport uses, so one format serves publish, migration, and
+        # disk; recovery rebuilds it from init_params the same way.
+        self.wal_dir = cfg.wal_dir
+        self.wal_fsync = cfg.wal_fsync or "none"
+        self.wal_segment_bytes = cfg.wal_segment_bytes
+        self._wal_epoch_marks: List[Tuple[int, dict]] = []
+        if cfg.wal_dir:
+            from repro.runtime.wal import WalWriter  # noqa: F401 (import check)
+            os.makedirs(cfg.wal_dir, exist_ok=True)
+            self._wal_codec = T.RowCodec(list(self._x0.keys()))
+        else:
+            self._wal_codec = None
 
         self.shards = [ServerShard(self, s) for s in range(self.n_slots)]
         self.membership = MembershipManager(self)
@@ -676,6 +693,37 @@ class PSRuntime(_WorkerFlowMixin):
     # ------------------------------------------------------------- plumbing
     def proc_of(self, worker: int) -> int:
         return worker // self.tpp
+
+    def _make_wal(self, sid: int):
+        """Per-shard :class:`~repro.runtime.wal.WalWriter`, or None when the
+        durability tier is off (called once per slot by ServerShard)."""
+        if not self.wal_dir:
+            return None
+        from repro.runtime.wal import WalWriter
+        return WalWriter(self.wal_dir, sid, self._wal_codec, self.n_proc,
+                         fsync=self.wal_fsync,
+                         segment_bytes=self.wal_segment_bytes)
+
+    def _close_wals(self) -> None:
+        """Seal every shard's WAL at clean teardown (shard threads are
+        joined, so the final vc/state are quiescent).  A crash path never
+        gets here by design: it leaves an unsealed/torn tail, which
+        :func:`repro.runtime.wal.read_segment` recovers to the last
+        complete record."""
+        for s in self.shards:
+            if s.wal is not None:
+                s.wal.seal(s.clock_vc)
+
+    def _wal_on_epoch(self, epoch: int, added, removed) -> None:
+        """Membership hook: record each epoch cut's per-slot log positions
+        (the kill-epoch bookmark point-in-time tooling starts from).  The
+        sealing itself happens shard-side in ``_maybe_cut`` — a retiring
+        slot seals its segment at the cut, stamped with its final vc."""
+        if not self.wal_dir:
+            return
+        marks = {s.sid: s.wal.marks() for s in self.shards
+                 if s.wal is not None}
+        self._wal_epoch_marks.append((epoch, marks))
 
     def _next_uid(self) -> int:
         return next(self._uid)
@@ -856,6 +904,7 @@ class PSRuntime(_WorkerFlowMixin):
             s.inbox.put(SHUTDOWN)
         for th in [p.thread for p in self.procs] + [s.thread for s in self.shards]:
             th.join(timeout=5.0)
+        self._close_wals()
         self.stats.sim_time = time.monotonic() - self._t0
         if self._errors:
             raise RuntimeError(
@@ -898,6 +947,7 @@ class PSRuntime(_WorkerFlowMixin):
                 s.inbox.put(SHUTDOWN)
             for s in self.shards:
                 s.thread.join(timeout=5.0)
+            self._close_wals()
         finally:
             self._finished = True
             self._cleanup_transport()
@@ -1103,8 +1153,40 @@ class PSRuntime(_WorkerFlowMixin):
                     os.makedirs(self.snapshot_dir, exist_ok=True)
                     save_snapshot(os.path.join(self.snapshot_dir,
                                                f"snap_c{done:06d}.npz"), snap)
+                if self.snapshot_keep_last:
+                    self._prune_retained()
         finally:
             self.membership.op_lock.release()
+
+    def _prune_retained(self) -> None:
+        """Retention (``snapshot_keep_last=k``): drop periodic snapshots
+        beyond the newest k — in memory and on disk — then drop WAL
+        segments fully covered by the *oldest retained* snapshot, so
+        every retained snapshot still recovers exactly (genesis replay
+        deliberately stops working past the horizon: retention trades
+        point-in-time depth for disk).  Caller holds ``_snap_lock``."""
+        k = self.snapshot_keep_last
+        if len(self.snapshots) > k:
+            del self.snapshots[:len(self.snapshots) - k]
+        if self.snapshot_dir:
+            import re
+            pat = re.compile(r"^snap_c(\d+)\.npz$")
+            on_disk = sorted((int(m.group(1)), f)
+                             for f in os.listdir(self.snapshot_dir)
+                             if (m := pat.match(f)))
+            for _, f in on_disk[:-k] if len(on_disk) > k else []:
+                try:
+                    os.remove(os.path.join(self.snapshot_dir, f))
+                except OSError:
+                    pass
+        if self.wal_dir and self.snapshots:
+            oldest = self.snapshots[0][1]
+            wal = oldest.get("wal")
+            if wal is not None:
+                from repro.runtime.wal import prune_segments
+                covered = {sid: int(p)
+                           for sid, p in enumerate(wal["parts"])}
+                prune_segments(self.wal_dir, covered)
 
     def latest_snapshot(self) -> Optional[dict]:
         """The most recent periodic snapshot, or None (serving-tier replica

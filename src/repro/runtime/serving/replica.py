@@ -88,6 +88,15 @@ class Replica:
             # install and keeps reads conservative until the in-stream
             # re-bootstrap lands here
             self.vc = np.full((rt.n_slots, rt.n_proc), -1, dtype=np.int64)
+        # per-row membership epoch of the last state cut that covered the
+        # row (-1 = genesis).  A publish cut at epoch e folds in ALL rows
+        # a prior owner applied before handing them off (the epoch barrier
+        # guarantees it), so an older-epoch delta arriving for a cut row is
+        # a late frame from the retiring slot's channel racing the new
+        # owner's bootstrap: applying it would double-count.
+        self.row_epoch: Dict[str, np.ndarray] = {
+            k: np.full(v.shape[0], -1, dtype=np.int64)
+            for k, v in self.values.items()}
         self.inbox: queue.Queue = queue.Queue()
         self.fins: set = set()              # shards that acked unsubscribe
         self.poisoned = False               # ingest failed: out of rotation
@@ -95,6 +104,7 @@ class Replica:
         self.reads = 0                      # served reads (routing cost)
         self.deltas_applied = 0
         self.bytes_ingested = 0
+        self.stale_row_drops = 0            # old-epoch delta rows filtered
         self._fifo = T.FifoAssert()         # per publishing shard
         self.thread = threading.Thread(target=self._loop,
                                        name=f"ps-replica-{rid}", daemon=True)
@@ -134,8 +144,17 @@ class Replica:
                     f"FIFO violation: shard {msg.shard}->replica "
                     f"{self.rid} {err}")
         if isinstance(msg, ReplicaDeltaMsg):
-            # rows may repeat across coalesced source parts: accumulate
-            np.add.at(self.values[msg.key], msg.rows, msg.delta)
+            # rows may repeat across coalesced source parts: accumulate.
+            # Rows whose last cut epoch is newer than the delta's epoch
+            # already contain it (see row_epoch above): drop them.
+            ok = self.row_epoch[msg.key][msg.rows] <= msg.epoch
+            if ok.all():
+                np.add.at(self.values[msg.key], msg.rows, msg.delta)
+            else:
+                self.stale_row_drops += int(np.count_nonzero(~ok))
+                if ok.any():
+                    np.add.at(self.values[msg.key], msg.rows[ok],
+                              msg.delta[ok])
             self.deltas_applied += 1
             self.bytes_ingested += msg.nbytes
             return False
@@ -148,6 +167,8 @@ class Replica:
             # wholesale (exact cut), adopt the stamped vc
             for key, part in msg.state.items():
                 self.values[key][part["rows"]] = part["values"]
+                if msg.epoch >= 0:
+                    self.row_epoch[key][part["rows"]] = msg.epoch
             np.maximum(self.vc[msg.shard], msg.clock_vc,
                        out=self.vc[msg.shard])
             return True

@@ -63,6 +63,16 @@ filled up is marked *stale* and its frames are dropped instead of stalling
 the shard's apply loop; every subsequent publish cycle retries a full
 in-stream re-bootstrap (state + vc, the exact same path as a fresh
 subscribe) and the replica resumes exact once its ring drains.
+
+Durability tier (:mod:`repro.runtime.wal`): with ``RuntimeConfig(wal_dir=)``
+the shard appends every applied update part to a per-slot write-ahead log
+— ``WalWriter.log_parts`` at the end of the apply's lock section (so the
+log marks stay consistent with the dense state), ``commit`` (group commit
++ vc stamp) from ``_flush_publish`` when the applied vector clock moved,
+and ``seal`` at the epoch cut of a retiring slot.  The same configuration
+arms :class:`UidDedup` on the apply path: at-least-once redelivery (a
+rejoined shard replaying its log, a retried wire) drops exact duplicates
+by uid under the per-process clock frontier instead of double-applying.
 """
 from __future__ import annotations
 
@@ -86,6 +96,49 @@ from repro.runtime.messages import (SHUTDOWN, AckBatchMsg, AckMsg, Channel,
 from repro.runtime.transport import FifoAssert, materialize_msg, release_msgs
 
 _BATCH = 256        # max messages coalesced per apply/dispatch cycle
+
+
+class UidDedup:
+    """Cross-epoch uid-level duplicate filter for the shard apply path.
+
+    Exactly-once apply under *at-least-once* delivery: a part is fresh iff
+    its clock timestamp is beyond the origin process's acknowledged
+    frontier AND its uid has not been seen above that frontier.  The
+    frontier is the per-process clock the shard has fully applied
+    (advanced by ClockMsg, which is FIFO-behind every part it covers on
+    the client->shard channel, so a live first delivery can never be
+    mistaken for a duplicate); uids above the frontier are held in a
+    per-process table and pruned as the frontier advances, bounding memory
+    to the in-flight window.
+
+    WAL recovery (:func:`repro.runtime.snapshot.recover_to_vc`) replays a
+    slot's log through one of these — the vc stamps drive ``advance`` —
+    which is what makes replay idempotent across overlapping segments and
+    the kill epoch: replaying the same record twice applies it once.
+    """
+
+    def __init__(self, n_proc: int):
+        self.frontier = np.full(n_proc, -1, dtype=np.int64)
+        self._seen: List[Dict[int, int]] = [{} for _ in range(n_proc)]
+        self.n_dropped = 0
+
+    def fresh(self, uid: int, process: int, ts: int) -> bool:
+        """Record-and-test: True exactly once per (uid, process) above the
+        frontier; False (a duplicate) otherwise."""
+        if ts <= self.frontier[process] or uid in self._seen[process]:
+            self.n_dropped += 1
+            return False
+        self._seen[process][uid] = ts
+        return True
+
+    def advance(self, process: int, clock: int) -> None:
+        """Raise the process frontier to ``clock`` and prune the uids it
+        now covers (their ts-vs-frontier test subsumes the uid test)."""
+        if clock > self.frontier[process]:
+            self.frontier[process] = clock
+            seen = self._seen[process]
+            self._seen[process] = {u: t for u, t in seen.items()
+                                   if t > clock}
 
 
 class ServerShard:
@@ -120,6 +173,10 @@ class ServerShard:
         self._held: List[object] = []      # next-epoch msgs, FIFO per proc
         # zero-lost/zero-duplicated audit: update parts applied, per origin
         self.applied_parts = np.zeros(rt.n_proc, dtype=np.int64)
+        # durability tier: per-slot write-ahead log + at-least-once dedup
+        # (both None unless the runtime was built with wal_dir)
+        self.wal = rt._make_wal(sid)
+        self._dedup = UidDedup(rt.n_proc) if self.wal is not None else None
         # serving tier: applied per-process vector clock (guarded by .lock
         # for consistent reads from the gateway) + replica publish channels
         self.clock_vc = np.full(rt.n_proc, -1, dtype=np.int64)
@@ -249,6 +306,10 @@ class ServerShard:
             with self.lock:
                 self.clock_vc[msg.process] = max(
                     self.clock_vc[msg.process], msg.clock)
+            if self._dedup is not None:
+                # every part of the period is FIFO-before this message:
+                # the dedup frontier may advance and prune its uid table
+                self._dedup.advance(msg.process, msg.clock)
             self._vc_dirty = True
             if msg.load is not None:
                 # metrics piggyback: the process's boundary counter snapshot
@@ -298,6 +359,12 @@ class ServerShard:
             rt.membership.inbox.put(
                 ("handoff", self.sid, (self.state(), self.vc_snapshot())))
         if not self._pending_part.owns(self.sid):
+            if self.wal is not None:
+                # the cut is final for this slot: no old-epoch update can
+                # arrive (channel FIFO behind the acks) and next-epoch
+                # updates route elsewhere — seal the segment at the epoch
+                # cut; a later re-activation opens the next one
+                self.wal.seal(self.vc_snapshot())
             # retiring: everything this slot will ever deliver (bar strong-
             # VAP-queued updates, which are exempt from the clock frontier
             # exactly like in the simulator) is FIFO-before these markers,
@@ -362,7 +429,8 @@ class ServerShard:
                 if rid in self._stale_subs:
                     continue               # the resync path re-bootstraps
                 if not self._publish_send(chan, [ReplicaStateMsg(
-                        self.sid, self.state(), self.vc_snapshot())]):
+                        self.sid, self.state(), self.vc_snapshot(),
+                        epoch=msg.epoch)]):
                     self._stale_subs = self._stale_subs | {rid}
                     self.pub_drops += 1
         self._vc_dirty = True
@@ -375,6 +443,14 @@ class ServerShard:
         if not run:
             return
         rt = self.rt
+        if self._dedup is not None:
+            # at-least-once delivery: drop exact duplicates before they
+            # touch the dense state, the audit counters, or the WAL
+            # (dropped messages' frame pins release with the batch)
+            run = [m for m in run
+                   if self._dedup.fresh(m.uid, m.process, m.ts)]
+            if not run:
+                return
         by_key: Dict[str, List[UpdateMsg]] = {}
         n_rows = n_bytes = 0
         for msg in run:
@@ -419,7 +495,16 @@ class ServerShard:
                 for rid in self.subscribers:
                     if rid not in self._stale_subs:
                         self._pub.setdefault(rid, []).append(
-                            ReplicaDeltaMsg(self.sid, key, rows, delta))
+                            ReplicaDeltaMsg(self.sid, key, rows, delta,
+                                            epoch=self.part.epoch))
+            if self.wal is not None:
+                # WAL append FIFO-behind the apply, inside the same lock
+                # section so the log marks (parts/applied/max_ts) stay
+                # consistent with the dense state a snapshot cuts; frames
+                # are encoded to owned bytes here (ring views are only
+                # valid while this cycle's pins are held) and written out
+                # at the next clock-boundary group commit
+                self.wal.log_parts(run)
         for msg in run:
             self._route_delivery(msg)
 
@@ -542,7 +627,8 @@ class ServerShard:
         wedged full starts out *stale* and gets its bootstrap from the
         resync path once the sink drains — the shard never stalls."""
         chan = msg.channel
-        boot = (ReplicaStateMsg(self.sid, self.state(), self.vc_snapshot())
+        boot = (ReplicaStateMsg(self.sid, self.state(), self.vc_snapshot(),
+                                epoch=self.part.epoch)
                 if msg.want_state
                 else ReplicaVcMsg(self.sid, self.vc_snapshot()))
         self.subscribers[msg.replica] = chan
@@ -581,7 +667,8 @@ class ServerShard:
         if chan.room() < self.rt._state_frame_bytes:
             return
         if self._publish_send(chan, [ReplicaStateMsg(
-                self.sid, self.state(), self.vc_snapshot())]):
+                self.sid, self.state(), self.vc_snapshot(),
+                epoch=self.part.epoch)]):
             self._stale_subs = self._stale_subs - {rid}
             self.pub_resyncs += 1
 
@@ -609,6 +696,12 @@ class ServerShard:
         elif self._pub:
             self._pub.clear()
         if vc_dirty:
+            if self.wal is not None and self.part.owns(self.sid):
+                # group commit at the clock boundary: pending delta frames
+                # + a vc stamp, FIFO on disk exactly like the publish
+                # stream (WAL-before-snapshot: the commit precedes any
+                # periodic snapshot this boundary triggers)
+                self.wal.commit(self.vc_snapshot())
             self.rt._maybe_periodic_snapshot()
 
     # ------------------------------------------------------------- snapshots
@@ -626,6 +719,24 @@ class ServerShard:
             return {key: {"rows": self.part.rows_of(key, self.sid).copy(),
                           "values": self.dense[key].copy()}
                     for key in self.dense}
+
+    def durability_cut(self):
+        """``(state, vc, wal marks)`` under ONE lock acquisition.
+
+        The WAL append in :meth:`_flush_updates` bumps the log marks in
+        the same lock section as the dense apply, so a cut taken here is
+        an exact per-slot log prefix: every part counted in ``marks`` is
+        folded into ``state``, and none beyond.  That is what lets
+        :func:`repro.runtime.snapshot.recover_to_vc` skip replay of the
+        covered prefix without double-applying or losing a part.
+        """
+        with self.lock:
+            state = {key: {"rows": self.part.rows_of(key, self.sid).copy(),
+                           "values": self.dense[key].copy()}
+                     for key in self.dense}
+            vc = self.clock_vc.copy()
+            marks = self.wal.marks() if self.wal is not None else None
+        return state, vc, marks
 
     def load_state(self, state: Dict[str, Dict[str, np.ndarray]]) -> None:
         """Adopt a snapshot taken by :meth:`state` (rejoin after a kill)."""

@@ -26,7 +26,9 @@ refactors of the message/runtime classes.
 from __future__ import annotations
 
 import json
-from typing import Dict, List
+import os
+import re
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -45,19 +47,52 @@ def take_snapshot(rt) -> dict:
     Elastic membership: only the *active* shards of the current epoch are
     captured (their row sets cover the master exactly), under the
     membership op lock so a snapshot can never interleave with a live
-    re-partition's install window."""
+    re-partition's install window.
+
+    Durability tier: when shards carry a WAL, each active shard's state,
+    vc, and log marks are cut under ONE lock acquisition
+    (``ServerShard.durability_cut``), and the snapshot gains a ``"wal"``
+    entry with per-*slot* logged-part positions (``parts``), per-origin
+    applied counts, and max update timestamps — the exact per-slot log
+    prefix this snapshot covers, which :func:`recover_to_vc` skips on
+    replay and :func:`repro.runtime.wal.prune_segments` truncates by."""
     with rt.membership.op_lock:
         acts = [s for s in rt.shards if rt.partition.owns(s.sid)]
-        vcs = [s.vc_snapshot() for s in acts]
-        return {
+        states, vcs, cut_marks = [], [], {}
+        for s in acts:
+            st, vc, mk = s.durability_cut()
+            states.append(st)
+            vcs.append(vc)
+            cut_marks[s.sid] = mk
+        snap = {
             "version": SNAPSHOT_VERSION,
             "n_shards": len(acts),
             "n_proc": rt.n_proc,
             "clock": min(int(vc.min()) for vc in vcs) + 1,
             "shapes": {k: tuple(v) for k, v in rt._shapes.items()},
-            "shards": [s.state() for s in acts],
+            "shards": states,
             "clock_vcs": vcs,
         }
+        if any(s.wal is not None for s in rt.shards):
+            n_slots = len(rt.shards)
+            parts = np.zeros(n_slots, dtype=np.int64)
+            applied = np.zeros((n_slots, rt.n_proc), dtype=np.int64)
+            max_ts = np.full((n_slots, rt.n_proc), -1, dtype=np.int64)
+            for s in rt.shards:
+                if s.wal is None:
+                    continue
+                mk = cut_marks.get(s.sid)
+                if mk is None:
+                    # inactive slot: its log is sealed/quiescent this
+                    # epoch, but read the marks under its lock anyway
+                    with s.lock:
+                        mk = s.wal.marks()
+                parts[s.sid] = mk["parts"]
+                applied[s.sid] = mk["applied"]
+                max_ts[s.sid] = mk["max_ts"]
+            snap["wal"] = {"slots": n_slots, "parts": parts,
+                           "applied": applied, "max_ts": max_ts}
+        return snap
 
 
 def assemble_master(snap: dict) -> Dict[str, np.ndarray]:
@@ -170,6 +205,9 @@ def save_snapshot(path, snap: dict) -> None:
         "keys": keys,
         "shapes": {k: list(snap["shapes"][k]) for k in keys},
     }
+    wal = snap.get("wal")
+    if wal is not None:
+        header["wal_slots"] = int(wal["slots"])
     arrays = {"header": np.frombuffer(
         json.dumps(header).encode(), dtype=np.uint8)}
     for sid, part in enumerate(snap["shards"]):
@@ -178,6 +216,10 @@ def save_snapshot(path, snap: dict) -> None:
             arrays[f"s{sid}_k{ki}_values"] = part[key]["values"]
     for sid, vc in enumerate(snap.get("clock_vcs") or []):
         arrays[f"s{sid}_vc"] = vc
+    if wal is not None:
+        arrays["wal_parts"] = np.asarray(wal["parts"], dtype=np.int64)
+        arrays["wal_applied"] = np.asarray(wal["applied"], dtype=np.int64)
+        arrays["wal_max_ts"] = np.asarray(wal["max_ts"], dtype=np.int64)
     np.savez(path, **arrays)
 
 
@@ -196,6 +238,12 @@ def load_snapshot(path) -> dict:
             shards.append(part)
             if f"s{sid}_vc" in z:
                 vcs.append(z[f"s{sid}_vc"])
+        wal = None
+        if header.get("wal_slots") is not None:
+            wal = {"slots": header["wal_slots"],
+                   "parts": z["wal_parts"],
+                   "applied": z["wal_applied"],
+                   "max_ts": z["wal_max_ts"]}
     out = {
         "version": header["version"],
         "n_shards": header["n_shards"],
@@ -208,4 +256,208 @@ def load_snapshot(path) -> dict:
         out["clock"] = header["clock"]
     if vcs:
         out["clock_vcs"] = vcs
+    if wal is not None:
+        out["wal"] = wal
     return out
+
+
+# ---------------------------------------------------------------------------
+# exact-clock recovery: snapshot + replay(log, upto_vc)  (durability tier)
+# ---------------------------------------------------------------------------
+
+_SNAP_RE = re.compile(r"^snap_c(\d+)\.npz$")
+
+
+def _snapshot_files(snapshot_dir: str) -> List[tuple]:
+    """``[(clock, path), ...]`` newest first."""
+    if not snapshot_dir or not os.path.isdir(snapshot_dir):
+        return []
+    out = []
+    for f in os.listdir(snapshot_dir):
+        m = _SNAP_RE.match(f)
+        if m:
+            out.append((int(m.group(1)), os.path.join(snapshot_dir, f)))
+    out.sort(reverse=True)
+    return out
+
+
+def _pick_covered_snapshot(snapshot_dir: str,
+                           upto: Optional[np.ndarray]) -> Optional[dict]:
+    """Newest on-disk periodic snapshot usable as a replay base: it must
+    carry WAL positional marks (``"wal"``), and — for a point-in-time
+    target — must not already fold in any update past ``upto`` (a snapshot
+    cannot be un-applied).  Snapshots failing coverage fall through to
+    older ones (then genesis); a *corrupt* snapshot raises instead of
+    being silently skipped."""
+    for _, path in _snapshot_files(snapshot_dir):
+        snap = load_snapshot(path)
+        validate_vcs(snap)
+        wal = snap.get("wal")
+        if wal is None:
+            continue           # no positional marks: prefix unknown
+        if upto is not None and (
+                np.asarray(wal["max_ts"]).max(axis=0) > upto).any():
+            continue           # contains updates past the target point
+        return snap
+    return None
+
+
+def _infer_n_proc(logs: dict) -> int:
+    n = 0
+    for recs in logs.values():
+        for _, records, _ in recs:
+            for kind, val in records:
+                if kind == "vc":
+                    n = max(n, int(np.asarray(val.clock_vc).shape[0]))
+                else:
+                    for m in val:
+                        n = max(n, m.process + 1)
+    if n == 0:
+        raise ValueError(
+            "cannot infer n_proc from an empty wal; pass n_proc=")
+    return n
+
+
+def recover_to_vc(init_params, wal_dir: str, *,
+                  snapshot_dir: Optional[str] = None,
+                  snapshot: Optional[dict] = None,
+                  upto_vc=None, n_proc: Optional[int] = None) -> dict:
+    """Rebuild exact master state from ``snapshot + replay(log, upto_vc)``.
+
+    ``init_params`` is the same initial table dict the runtime was
+    constructed with (it fixes key order — and therefore the wire codec —
+    plus shapes and the additive baseline).  The newest usable periodic
+    snapshot under ``snapshot_dir`` (or the explicit ``snapshot``) seeds
+    the state and positions replay at the per-slot logged-part prefix it
+    covers (``snap["wal"]["parts"]``); every later part in the per-shard
+    logs under ``wal_dir`` is re-applied with ``np.add.at`` onto the
+    full-key buffers.  With no usable snapshot, recovery replays the full
+    log from genesis.
+
+    ``upto_vc`` (point-in-time restore): per-origin-process clock vector;
+    parts timestamped past their origin's entry are excluded, yielding the
+    exact state at that vector-clock cut — updates are additive and
+    commutative, so the cut equals what a run stopped at that frontier
+    would hold.
+
+    Replay is **idempotent**: a per-slot :class:`~repro.runtime.shard.
+    UidDedup` drops uid-level duplicates across the kill epoch, with its
+    frontier advanced by the vc stamps in the log (each stamp is validated
+    via :func:`validate_vcs` — a tampered/out-of-range stamp is refused
+    loudly).  Torn segment tails (kill mid-write) are dropped by
+    :func:`repro.runtime.wal.read_segment`.
+
+    Returns ``{"params", "applied_parts", "clock_vc", "clock",
+    "n_replayed", "n_deduped", "from_snapshot"}`` where ``applied_parts``
+    is the per-origin-process count of parts folded into ``params``
+    (snapshot-covered + replayed) — the number the runtime's
+    zero-lost/zero-duplicated counter audit compares against.
+    """
+    from repro.runtime.shard import UidDedup
+    from repro.runtime.transport import RowCodec
+    from repro.runtime.wal import read_segment, wal_segments
+
+    # canonical flat (R, C) float64 buffers, exactly like PSRuntime.__init__
+    shapes: Dict[str, tuple] = {}
+    flat: Dict[str, np.ndarray] = {}
+    for key, v in init_params.items():
+        a = np.asarray(v, dtype=np.float64)
+        shapes[key] = a.shape
+        f = a.reshape(a.shape[0], -1) if a.ndim > 1 else a.reshape(-1, 1)
+        flat[key] = f.copy()
+    codec = RowCodec(list(init_params.keys()))
+
+    upto = None
+    if upto_vc is not None:
+        upto = np.asarray(upto_vc, dtype=np.int64).reshape(-1)
+        if n_proc is None:
+            n_proc = int(upto.shape[0])
+
+    # decode every slot's log up front (cold path; segments are bounded by
+    # rotation + retention) — genesis recovery infers n_proc from it
+    logs = {sid: [(start, *read_segment(path, codec))
+                  for start, path in seg_list]
+            for sid, seg_list in wal_segments(wal_dir).items()}
+
+    snap = snapshot
+    if snap is None and snapshot_dir is not None:
+        snap = _pick_covered_snapshot(snapshot_dir, upto)
+    if snap is not None:
+        if snap.get("version") != SNAPSHOT_VERSION:
+            raise ValueError(
+                f"unsupported snapshot version {snap.get('version')}")
+        validate_vcs(snap)
+        if snap.get("wal") is None:
+            raise ValueError("snapshot carries no wal marks; cannot "
+                             "position replay (take it with wal_dir set)")
+        if n_proc is None:
+            n_proc = snap.get("n_proc")
+    if n_proc is None:
+        n_proc = _infer_n_proc(logs)
+
+    skip_parts: Dict[int, int] = {}
+    applied = np.zeros(n_proc, dtype=np.int64)
+    frontier = np.full(n_proc, -1, dtype=np.int64)
+    if snap is not None:
+        wal = snap["wal"]
+        for sid, p in enumerate(np.asarray(wal["parts"])):
+            skip_parts[sid] = int(p)
+        applied += np.asarray(wal["applied"], dtype=np.int64).sum(axis=0)
+        np.maximum(frontier,
+                   np.asarray(wal["max_ts"], dtype=np.int64).max(axis=0),
+                   out=frontier)
+        master = assemble_master(snap)
+        if set(master) != set(flat):
+            raise ValueError(f"snapshot keys {sorted(master)} != "
+                             f"init_params keys {sorted(flat)}")
+        for key, full in master.items():
+            if full.shape != flat[key].shape:
+                raise ValueError(f"snapshot shape mismatch for {key!r}: "
+                                 f"{full.shape} != {flat[key].shape}")
+            flat[key][...] = full
+
+    n_replayed = 0
+    n_deduped = 0
+    for sid in sorted(logs):
+        # per-SLOT dedup: stamps only order a single slot's log, and uids
+        # are only unique per (process, slot-log) — a shared frontier
+        # advanced by one slot's stamps would false-drop another's parts
+        dedup = UidDedup(n_proc)
+        cover = skip_parts.get(sid, 0)
+        for start, records, _sealed in logs[sid]:
+            pos = start
+            for kind, val in records:
+                if kind == "vc":
+                    stamp = np.asarray(val.clock_vc)
+                    validate_vcs({"clock_vcs": [stamp], "n_proc": n_proc})
+                    for p in range(n_proc):
+                        c = int(stamp[p])
+                        if upto is not None:
+                            c = min(c, int(upto[p]))
+                        dedup.advance(p, c)
+                    continue
+                for m in val:
+                    at, pos = pos, pos + 1
+                    if at < cover:
+                        continue        # inside the snapshot's prefix
+                    if upto is not None and m.ts > upto[m.process]:
+                        continue        # past the point-in-time target
+                    if not dedup.fresh(m.uid, m.process, m.ts):
+                        n_deduped += 1
+                        continue
+                    np.add.at(flat[m.key], np.asarray(m.rows),
+                              np.asarray(m.delta))
+                    applied[m.process] += 1
+                    n_replayed += 1
+                    if m.ts > frontier[m.process]:
+                        frontier[m.process] = m.ts
+
+    return {
+        "params": {k: flat[k].reshape(shapes[k]) for k in flat},
+        "applied_parts": applied,
+        "clock_vc": frontier,
+        "clock": int(frontier.min()) + 1 if n_proc else 0,
+        "n_replayed": n_replayed,
+        "n_deduped": n_deduped,
+        "from_snapshot": None if snap is None else snap.get("clock"),
+    }

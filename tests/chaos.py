@@ -315,7 +315,9 @@ def chaos_autoscale_policy():
 def chaos_run(seed: int, pol, n_clocks: int, transport: str = "queue",
               max_shards: int = 4, n_events: int = 4, serving: bool = False,
               wedge: bool = False, serving_transport: str = "queue",
-              autoscale: bool = False, fn=None,
+              autoscale: bool = False, fn=None, wal_dir: Optional[str] = None,
+              wal_fsync: Optional[str] = None, snapshot_every: int = 0,
+              snapshot_dir: Optional[str] = None, snapshot_keep_last: int = 0,
               timeout: float = 110.0):
     """One full chaos leg: free 4-worker run + scripted membership faults,
     optionally a gateway under SLO'd reads and a replica wedger (which
@@ -334,7 +336,9 @@ def chaos_run(seed: int, pol, n_clocks: int, transport: str = "queue",
         seed, n_clocks, n_shards=2, max_shards=max_shards, n_events=n_events)
     rt = PSRuntime(RuntimeConfig(4, pol, x0(), n_shards=2, threads_per_process=2,
                    seed=seed, max_shards=max_shards, transport=transport,
-                   membership_plan=plan))
+                   membership_plan=plan, wal_dir=wal_dir, wal_fsync=wal_fsync,
+                   snapshot_every=snapshot_every, snapshot_dir=snapshot_dir,
+                   snapshot_keep_last=snapshot_keep_last))
     reader = wedger = gw = asc = None
     rt.start(det_fn(seed) if fn is None else fn, n_clocks, timeout=timeout)
     try:
@@ -364,11 +368,32 @@ def chaos_run(seed: int, pol, n_clocks: int, transport: str = "queue",
         reader.pub_drops = gw.replicas.pub_drops
         reader.pub_resyncs = gw.replicas.pub_resyncs
         time.sleep(0.2)                # let the last publish cycle drain
-        stale = gw.replicas.stale_replicas
+        # then wait (bounded) for live replicas that still trail the
+        # quiesced master frontier: vc stamps ride FIFO-behind their
+        # deltas, so a caught-up replica vc means its values drained too —
+        # the fixed sleep alone flaked when a post-wedge resync needed
+        # longer than the constant
+        rset = gw.replicas
+        mvc = rset.master_vc()
+
+        def _lagging() -> set:
+            stale = rset.stale_replicas
+            return {rep.rid for rep in rset.replicas
+                    if not rep.poisoned and rep.rid not in stale
+                    and rset.staleness(rep.vc, mvc) > 0}
+
+        deadline = time.monotonic() + 10.0
+        while _lagging() and time.monotonic() < deadline:
+            time.sleep(0.02)
+        # a replica still lagging at the deadline did NOT finish un-stale
+        # and drained; it is excluded like a stale one (the callers'
+        # `assert reader.final_replicas` still guards against everyone
+        # ending stale/poisoned/undrained)
+        skip = rset.stale_replicas | _lagging()
         reader.final_replicas = [
             {k: rep.serve(k)[0] for k in x0()}
-            for rep in gw.replicas.replicas
-            if not rep.poisoned and rep.rid not in stale]
+            for rep in rset.replicas
+            if not rep.poisoned and rep.rid not in skip]
         gw.close()
     return rt, stats, plan, reader
 
@@ -382,3 +407,27 @@ def assert_counters(rt) -> None:
     assert applied.tolist() == rt._parts_sent.tolist(), (
         f"lost/duplicated updates: sent {rt._parts_sent.tolist()} "
         f"applied {applied.tolist()}")
+
+
+def assert_wal_recovery(rt, seed: int, n_clocks: int, wal_dir: str,
+                        fn=None, snapshot_dir: Optional[str] = None) -> None:
+    """Durability-tier audit, the strict upgrade over snapshot-granularity
+    loss: rebuild state from ``snapshot + replay(log)`` alone
+    (:func:`repro.runtime.snapshot.recover_to_vc`) and assert **zero**
+    lost/duplicated updates — the per-origin-process count of parts folded
+    into the recovered state equals the per-process parts-sent counters —
+    plus recovered final state bitwise equal to the membership-free
+    expected state (integer test deltas: f64 sums are exact and
+    order-independent)."""
+    from repro.runtime import recover_to_vc
+    rec = recover_to_vc(x0(), wal_dir, snapshot_dir=snapshot_dir)
+    assert rec["applied_parts"].tolist() == rt._parts_sent.tolist(), (
+        f"wal recovery lost/duplicated updates: sent "
+        f"{rt._parts_sent.tolist()} recovered "
+        f"{rec['applied_parts'].tolist()} (deduped {rec['n_deduped']})")
+    exp = expected_final(seed, 4, n_clocks, fn=fn)
+    for k, v in exp.items():
+        np.testing.assert_array_equal(
+            rec["params"][k], v,
+            err_msg=f"wal-recovered state diverges from the membership-free "
+                    f"expectation for {k!r}")

@@ -23,9 +23,9 @@ import pytest
 
 from repro.core import policies
 
-from chaos import (assert_counters, assert_paper_bounds, chaos_run,
-                   expected_final, run_sim_schedule, random_schedule, x0,
-                   zipf_fn)
+from chaos import (assert_counters, assert_paper_bounds, assert_wal_recovery,
+                   chaos_run, expected_final, run_sim_schedule,
+                   random_schedule, x0, zipf_fn)
 
 pytestmark = pytest.mark.chaos
 
@@ -86,11 +86,18 @@ def _assert_chaos_outcome(rt, stats, plan, seed, n_clocks):
 
 
 @pytest.mark.parametrize("polname,pol", _POLICIES, ids=[p[0] for p in _POLICIES])
-def test_runtime_membership_chaos_smoke(polname, pol):
+def test_runtime_membership_chaos_smoke(polname, pol, tmp_path):
+    """Membership chaos with the durability tier on: besides the live-state
+    assertions, the WAL alone must reconstruct the exact final state with
+    zero lost/duplicated updates (snapshot-granularity loss is no longer
+    tolerated)."""
     seed = {"ssp3": 21, "vap": 22, "cvap": 23}[polname]
     n_clocks = 30
-    rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, n_events=3)
+    wal_dir = str(tmp_path / "wal")
+    rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, n_events=3,
+                                   wal_dir=wal_dir)
     _assert_chaos_outcome(rt, stats, plan, seed, n_clocks)
+    assert_wal_recovery(rt, seed, n_clocks, wal_dir)
 
 
 @pytest.mark.slow
@@ -122,6 +129,29 @@ def test_runtime_membership_chaos_multiprocess():
     for k, ref in expected_final(seed, 4, n_clocks).items():
         np.testing.assert_array_equal(rt.master_value(k).reshape(ref.shape),
                                       ref)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("transport", ["shm", "tcp"])
+@pytest.mark.parametrize("polname,pol", _POLICIES, ids=[p[0] for p in _POLICIES])
+def test_runtime_membership_chaos_wal_wire_full(polname, pol, transport,
+                                                tmp_path):
+    """Durability matrix over the real wires (shm rings / TCP sockets) ×
+    SSP/VAP/CVAP with kill+rejoin faults: the per-shard WAL — written by
+    the parent-side shard threads while forked clients drive load over the
+    wire — must reconstruct the exact final state with zero lost or
+    duplicated updates (per-process counter audit), bitwise equal to the
+    membership-free expectation."""
+    seed = {"ssp3": 91, "vap": 92, "cvap": 93}[polname]
+    n_clocks = 40
+    wal_dir = str(tmp_path / "wal")
+    rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, transport=transport,
+                                   n_events=3, wal_dir=wal_dir,
+                                   timeout=150.0)
+    assert stats.violations == [], stats.violations[:5]
+    assert [r for _, r in plan.results] == ["ok"] * len(plan.events)
+    assert_counters(rt)
+    assert_wal_recovery(rt, seed, n_clocks, wal_dir)
 
 
 # ---------------------------------------------------------------------------

@@ -195,12 +195,13 @@ def test_unattainable_slo_escalates_to_master():
 # ---------------------------------------------------------------------------
 
 
-def test_replica_joins_mid_run_equals_master_at_quiesce():
+def test_replica_joins_mid_run_equals_master_at_quiesce(tmp_path):
     """A replica added mid-run — warm-started from the latest periodic
     snapshot, corrected by the shards' in-stream bootstrap states — holds
     exactly the master state once the runtime quiesces."""
     rt = PSRuntime(RuntimeConfig(4, policies.ssp(3), _x0(), n_shards=2,
-                   threads_per_process=2, seed=9, snapshot_every=5))
+                   threads_per_process=2, seed=9, snapshot_every=5,
+                   snapshot_dir=str(tmp_path)))
     rt.start(_fn(pause=0.002), 40, timeout=120)
     gw = ReadGateway(rt, n_replicas=1, transport="queue")
     try:
