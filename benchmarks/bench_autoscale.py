@@ -30,9 +30,6 @@ off, and each gated (a failed gate exits 1 — the CI bench-smoke job runs
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import platform
 import threading
 import time
 from typing import Dict, List, Optional
@@ -42,6 +39,11 @@ import numpy as np
 from repro.core import ssp
 from repro.runtime import (Autoscaler, AutoscalePolicy, PSRuntime,
                            ReadGateway, RuntimeConfig)
+
+try:                                    # package import (benchmarks.run)
+    from benchmarks import common as _common
+except ImportError:                     # direct script run from benchmarks/
+    import common as _common
 
 R, C = 64, 128
 ZIPF_ALPHA = 1.2
@@ -294,20 +296,7 @@ def gates(rows: List[Dict]) -> List[str]:
 
 
 def write_json(rows: List[Dict], path: str) -> None:
-    out = {
-        "schema": "bench_autoscale/v1",
-        "meta": {
-            "python": platform.python_version(),
-            "machine": platform.machine(),
-            "cpus": os.cpu_count(),
-        },
-        "rows": rows,
-    }
-    parent = os.path.dirname(path)
-    if parent:
-        os.makedirs(parent, exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    _common.write_bench_json(path, "bench_autoscale", rows)
 
 
 def main() -> None:

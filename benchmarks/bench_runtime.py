@@ -36,9 +36,6 @@ CLI (the CI bench-smoke job runs the tiny config and uploads the JSON):
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import platform
 import threading
 import time
 from typing import Dict, List, Optional, Sequence
@@ -47,6 +44,11 @@ import numpy as np
 
 from repro.core import bsp, ssp, vap
 from repro.runtime import PSRuntime, RuntimeConfig
+
+try:                                    # package import (benchmarks.run)
+    from benchmarks import common as _common
+except ImportError:                     # direct script run: python benchmarks/bench_runtime.py
+    import common as _common
 
 KEYS = {"w": (64, 8), "b": (16,)}
 CLOCKS = 60
@@ -112,11 +114,12 @@ _update_fn = _mk_update_fn(COMPUTE_ITERS)
 def _one(name: str, policy, n_workers: int, transport: str,
          clocks: int, zero_copy: Optional[bool] = None,
          ps_kernels: bool = False, update_fn=None,
-         wire: Optional[str] = None) -> Dict:
+         wire: Optional[str] = None, trace=None,
+         variant: Optional[str] = None) -> Dict:
     x0 = {k: np.zeros(shape) for k, shape in KEYS.items()}
     rt = PSRuntime(RuntimeConfig(n_workers, policy, x0, n_shards=2,
                    threads_per_process=1, seed=0, transport=transport,
-                   zero_copy=zero_copy, ps_kernels=ps_kernels))
+                   zero_copy=zero_copy, ps_kernels=ps_kernels, trace=trace))
     lat: List[float] = []
     stop = threading.Event()
 
@@ -140,6 +143,8 @@ def _one(name: str, policy, n_workers: int, transport: str,
     blocked = (stats.block_time_clock + stats.block_time_value) / (
         max(wall, 1e-9) * n_workers)
     suffix = f"/{wire}" if wire else ""
+    if variant:
+        suffix += f"/{variant}"
     row = {
         "name": f"runtime/{name}/{transport}/w{n_workers}{suffix}",
         "policy": name,
@@ -155,6 +160,8 @@ def _one(name: str, policy, n_workers: int, transport: str,
     }
     if wire:
         row["wire"] = wire
+    if variant:
+        row["variant"] = variant
     return row
 
 
@@ -178,6 +185,27 @@ def run_zero_copy_ab(workers: int = 2, clocks: int = 12,
     return rows
 
 
+def run_trace_ab(workers: int = 2, clocks: int = 12,
+                 policy_name: str = "ssp3") -> List[Dict]:
+    """A/B rows for the tracing tier at equal workers on wire-bound traffic
+    (compute dialed down like the zero-copy A/B, so per-update overhead is
+    maximally visible): trace off — twice, the A/A pair bounds run-to-run
+    noise — vs sampled (5% of lifelines) vs full (every event).  The CI
+    gate asserts sampled tracing costs <5% of updates/s; full tracing is
+    reported, not gated."""
+    fn = _mk_update_fn(2)
+    rows = []
+    for variant, trace in (("trace_off", None), ("trace_off2", None),
+                           ("trace_sampled", {"sample": 0.05}),
+                           ("trace_full", 1.0)):
+        # best-of-2 per config, same rationale as the zero-copy A/B
+        runs = [_one(policy_name, ssp(3), workers, "shm", clocks,
+                     update_fn=fn, trace=trace, variant=variant)
+                for _ in range(2)]
+        rows.append(max(runs, key=lambda r: r["updates_per_s"]))
+    return rows
+
+
 def run(transports: Sequence[str] = ("queue", "proc"),
         workers: Sequence[int] = (1, 2, 4),
         clocks: int = CLOCKS,
@@ -194,22 +222,10 @@ def write_json(rows: List[Dict], path: str,
                parallel_x2: Optional[float] = None) -> None:
     """Consolidated BENCH_runtime.json: the perf trajectory future PRs
     compare against (updates/s + read p50/p99 per policy x transport x
-    workers, plus the host parallelism calibration)."""
-    out = {
-        "schema": "bench_runtime/v1",
-        "meta": {
-            "python": platform.python_version(),
-            "machine": platform.machine(),
-            "cpus": os.cpu_count(),
-            "proc_parallel_x2": parallel_x2,
-        },
-        "rows": rows,
-    }
-    parent = os.path.dirname(path)
-    if parent:
-        os.makedirs(parent, exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    workers), stamped by benchmarks.common with git sha, UTC timestamp and
+    the host parallelism calibration."""
+    _common.write_bench_json(path, "bench_runtime", rows,
+                             calibration={"proc_parallel_x2": parallel_x2})
 
 
 def main() -> None:
@@ -226,6 +242,10 @@ def main() -> None:
                     help="append shm zero-copy vs pickle A/B rows (equal "
                          "workers, wire-bound traffic) and FAIL if the "
                          "zero-copy path is slower than the pickle path")
+    ap.add_argument("--ab-trace", action="store_true",
+                    help="append trace off/off/sampled/full A/B rows (equal "
+                         "workers, wire-bound traffic) and FAIL if sampled "
+                         "tracing costs >=5%% of updates/s")
     args = ap.parse_args()
 
     transports = (args.transports.split(",") if args.transports
@@ -274,6 +294,20 @@ def main() -> None:
               f"upd/s vs pickle {by_wire['pickle']:.0f} upd/s (x{x:.2f})")
         if x < 1.0:
             print("# GATE FAILED: zero-copy path slower than pickle path")
+            gate_failed = True
+    if args.ab_trace:
+        ab = run_trace_ab(workers=2, clocks=args.clocks or 12)
+        rows.extend(ab)
+        by = {r["variant"]: r["updates_per_s"] for r in ab}
+        base = max(by["trace_off"], by["trace_off2"])
+        aa = abs(by["trace_off"] - by["trace_off2"]) / max(base, 1e-9)
+        xs = by["trace_sampled"] / max(base, 1e-9)
+        xf = by["trace_full"] / max(base, 1e-9)
+        print(f"# trace A/B @ w2: off {base:.0f} upd/s "
+              f"(A/A spread {aa * 100:.1f}%), sampled x{xs:.2f}, "
+              f"full x{xf:.2f}")
+        if xs < 0.95:
+            print("# GATE FAILED: sampled tracing costs >=5% of updates/s")
             gate_failed = True
     if args.json:
         write_json(rows, args.json, parallel_x2=cal)

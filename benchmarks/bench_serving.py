@@ -33,9 +33,6 @@ CLI (the CI bench-smoke job runs the tiny config and uploads the JSON):
 from __future__ import annotations
 
 import argparse
-import json
-import os
-import platform
 import threading
 import time
 from typing import Dict, List, Optional, Sequence
@@ -44,6 +41,11 @@ import numpy as np
 
 from repro.core import ssp
 from repro.runtime import PSRuntime, ReadGateway, RuntimeConfig
+
+try:                                    # package import (benchmarks.run)
+    from benchmarks import common as _common
+except ImportError:                     # direct script run from benchmarks/
+    import common as _common
 
 KEYS = {"w": (512, 64)}       # 256 KiB of float64: copies & scatters matter
 CLOCKS = 40
@@ -156,21 +158,9 @@ def run(transports: Sequence[str] = ("queue", "proc"),
 
 def write_json(rows: List[Dict], path: str) -> None:
     """Consolidated BENCH_serving.json: replica-vs-locked-master serving
-    throughput at equal worker count, per transport x replicas x SLO."""
-    out = {
-        "schema": "bench_serving/v1",
-        "meta": {
-            "python": platform.python_version(),
-            "machine": platform.machine(),
-            "cpus": os.cpu_count(),
-        },
-        "rows": rows,
-    }
-    parent = os.path.dirname(path)
-    if parent:
-        os.makedirs(parent, exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    throughput at equal worker count, per transport x replicas x SLO
+    (stamped by benchmarks.common: git sha, UTC timestamp, host meta)."""
+    _common.write_bench_json(path, "bench_serving", rows)
 
 
 def main() -> None:

@@ -22,9 +22,7 @@ boundary — plus a recovery-throughput row:
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import platform
 import shutil
 import statistics
 import tempfile
@@ -35,6 +33,11 @@ import numpy as np
 
 from repro.core import ssp
 from repro.runtime import PSRuntime, RuntimeConfig, recover_to_vc
+
+try:                                    # package import (benchmarks.run)
+    from benchmarks import common as _common
+except ImportError:                     # direct script run from benchmarks/
+    import common as _common
 
 R, C = 64, 128
 
@@ -162,20 +165,7 @@ def gates(rows: List[Dict]) -> List[str]:
 
 
 def write_json(rows: List[Dict], path: str) -> None:
-    out = {
-        "schema": "bench_wal/v1",
-        "meta": {
-            "python": platform.python_version(),
-            "machine": platform.machine(),
-            "cpus": os.cpu_count(),
-        },
-        "rows": rows,
-    }
-    parent = os.path.dirname(path)
-    if parent:
-        os.makedirs(parent, exist_ok=True)
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    _common.write_bench_json(path, "bench_wal", rows)
 
 
 def main() -> None:

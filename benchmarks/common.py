@@ -1,0 +1,67 @@
+"""Shared bench-result writer: one stamped schema for every ``BENCH_*.json``.
+
+Every benchmark emitter (``bench_runtime``, ``bench_serving``,
+``bench_autoscale``, ``bench_wal``, and the consolidated ``benchmarks.run``)
+routes its JSON through :func:`write_bench_json`, so every artifact carries
+the same provenance block — schema name + version, the git sha it was
+measured at, a UTC timestamp, and the host/calibration meta.  Those are the
+fields a perf-trajectory diff needs before comparing two artifacts means
+anything: same schema, known commit, known host ceiling.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import subprocess
+from datetime import datetime, timezone
+from typing import Dict, List, Optional
+
+SCHEMA_VERSION = 2
+
+
+def git_sha() -> Optional[str]:
+    """The commit the numbers were measured at (None outside a checkout)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+    except OSError:
+        return None
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else None
+
+
+def host_meta(**calibration) -> Dict:
+    """Host identity + whatever calibration numbers the bench measured
+    (e.g. ``proc_parallel_x2``, the physical 1->2 process scaling ceiling)."""
+    meta = {
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+        "platform": platform.platform(),
+        "cpus": os.cpu_count(),
+    }
+    meta.update({k: v for k, v in calibration.items() if v is not None})
+    return meta
+
+
+def write_bench_json(path: str, bench: str, rows: List[Dict],
+                     calibration: Optional[Dict] = None) -> Dict:
+    """Write one stamped bench artifact and return the document."""
+    out = {
+        "schema": f"{bench}/v{SCHEMA_VERSION}",
+        "schema_version": SCHEMA_VERSION,
+        "bench": bench,
+        "git_sha": git_sha(),
+        "generated_utc": datetime.now(timezone.utc).isoformat(
+            timespec="seconds"),
+        "meta": host_meta(**(calibration or {})),
+        "rows": rows,
+    }
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    return out

@@ -8,7 +8,6 @@ artifacts exist.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -112,11 +111,11 @@ def main() -> None:
     else:
         print("# (no dry-run artifacts; run repro.launch.dryrun --all first)")
 
+    from benchmarks import common
     out = os.path.join(os.path.dirname(__file__), "..", "results",
                        "bench_results.json")
-    os.makedirs(os.path.dirname(out), exist_ok=True)
-    with open(out, "w") as f:
-        json.dump(all_rows, f, indent=1, default=str)
+    common.write_bench_json(out, "bench_results", all_rows,
+                            calibration={"proc_parallel_x2": cal})
     print(f"# done in {time.time() - t0:.1f}s -> {out}")
 
 

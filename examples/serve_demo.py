@@ -38,6 +38,13 @@ Running the runtime across processes
 The replica publish streams ride the matching serving transport (queue ->
 in-process channels, proc/shm -> shm rings + doorbells, tcp -> loopback
 sockets); the same frames and FIFO seq assertions as the write path.
+
+``--trace out.json`` records the whole run with the end-to-end tracing
+tier (:mod:`repro.runtime.trace`) and exports Chrome trace-event JSON on
+exit — open the file in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing`` to see every layer as its own track, with update
+lifelines arcing client -> shard -> replica and reads/escalations on the
+gateway track.
 """
 import argparse
 import dataclasses
@@ -67,7 +74,8 @@ def run_ps_demo(args) -> None:
     serving = {"queue": "queue", "proc": "shm", "shm": "shm",
                "tcp": "tcp"}[args.transport]
     rt = PSRuntime(RuntimeConfig(n_workers, policy, {"x": np.zeros(dim)}, n_shards=2,
-                   threads_per_process=1, seed=0, transport=args.transport))
+                   threads_per_process=1, seed=0, transport=args.transport,
+                   trace=bool(args.trace) or None))
     print(f"serving from live PS runtime: {n_workers} workers, "
           f"policy {policy.kind}, {n_clocks} clocks, "
           f"transport {args.transport}, {args.replicas} replicas "
@@ -107,6 +115,11 @@ def run_ps_demo(args) -> None:
               f"{dict(enumerate(hist.tolist()))}; escalations {esc}; "
               f"per-replica {gw.stats.reads_per_replica}")
         gw.close()
+    if args.trace:
+        info = rt.dump_trace(args.trace)
+        print(f"trace: {info['events']} events -> {info['path']} "
+              f"({info['dropped']} dropped; open in Perfetto / "
+              f"chrome://tracing)")
 
 
 def main() -> None:
@@ -131,6 +144,10 @@ def main() -> None:
     ap.add_argument("--slo", default="3",
                     help='per-read staleness SLO: an integer k (clocks '
                          'behind the master vector clock) or "fresh"')
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the run with the end-to-end tracing tier "
+                         "and export Perfetto-loadable Chrome trace JSON "
+                         "here on exit (--ps mode)")
     args = ap.parse_args()
     if args.ps:
         run_ps_demo(args)

@@ -12,6 +12,8 @@ client processes over loopback sockets / shared-memory rings
 with snapshot/restore of the master shard state in
 :mod:`repro.runtime.snapshot`.
 """
+import logging as _logging
+
 from repro.runtime.autoscale import (AutoscaleAction, AutoscalePolicy,
                                      Autoscaler)
 from repro.runtime.config import RuntimeConfig
@@ -39,6 +41,9 @@ from repro.runtime.snapshot import (conservative_vc, load_snapshot,
                                     recover_to_vc, save_snapshot,
                                     snapshot_params, take_snapshot,
                                     validate_vcs)
+from repro.runtime.trace import (TraceConfig, TraceHub, dump_chrome_trace,
+                                 explain_block, explain_read,
+                                 staleness_timeline)
 from repro.runtime.transport import (FifoAssert, FrameDecoder, ShmRing,
                                      WireChannel, encode_frame, require_tso)
 from repro.runtime.wal import (WalWriter, prune_segments, read_segment,
@@ -58,8 +63,17 @@ __all__ = [
     "RuntimeConfig", "RuntimeMetrics", "RuntimeViewHandle",
     "SERVING_TRANSPORTS", "ServerShard", "ShardFinMsg", "ShardMetrics",
     "ShmRing", "SnapshotMetrics", "SubscribeMsg", "TRANSPORTS",
-    "UidDedup", "UnsubscribeMsg", "UpdateMsg", "WalWriter", "WireChannel",
-    "conservative_vc", "encode_frame", "load_snapshot", "prune_segments",
+    "TraceConfig", "TraceHub", "UidDedup", "UnsubscribeMsg", "UpdateMsg",
+    "WalWriter", "WireChannel",
+    "conservative_vc", "dump_chrome_trace", "encode_frame", "explain_block",
+    "explain_read", "load_snapshot", "prune_segments",
     "read_segment", "recover_to_vc", "require_tso", "save_snapshot",
-    "snapshot_params", "take_snapshot", "validate_vcs", "wal_segments",
+    "snapshot_params", "staleness_timeline", "take_snapshot", "validate_vcs",
+    "wal_segments",
 ]
+
+# library logging etiquette: the "repro.runtime" hierarchy emits structured
+# degradation warnings (replica poisoned/stale, publish drops, shed on/off,
+# shm stale-cursor retries, membership op timeouts, WAL torn tails); a
+# NullHandler keeps them silent unless the application configures logging.
+_logging.getLogger("repro.runtime").addHandler(_logging.NullHandler())

@@ -38,12 +38,15 @@ under Zipf-skewed bursty load and asserts exactly that.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 from repro.runtime.metrics import MetricsHub, RuntimeMetrics
+
+log = logging.getLogger("repro.runtime.autoscale")
 
 
 @dataclass
@@ -197,6 +200,9 @@ class Autoscaler:
             except BaseException as e:
                 # an op racing the run's quiesce (or a raced slot pick) is
                 # an expected loss, never an error of the run itself
+                log.warning("autoscaler op %s %r failed: %r (expected when "
+                            "racing the run's quiesce; recorded, not fatal)",
+                            kind, dec, e)
                 self._record(kind, repr(dec), False, repr(e))
 
     def step(self) -> List[Tuple]:

@@ -74,6 +74,13 @@ class RuntimeConfig:
     # (0 = keep all), pruning WAL segments fully covered by the oldest
     # retained snapshot along with them.
     snapshot_keep_last: int = 0
+    # tracing tier (repro.runtime.trace): sampled end-to-end event tracing
+    # across every layer into per-thread bounded ring buffers, exported as
+    # Chrome trace JSON by rt.dump_trace().  None/False = off (the default,
+    # near-zero cost); True = on with defaults; a float in (0, 1] = the
+    # update-lifeline sample rate; a {"sample":, "capacity":} dict or a
+    # trace.TraceConfig for full control.
+    trace: object = None
 
     def __post_init__(self) -> None:
         if self.n_workers % self.threads_per_process:
@@ -107,6 +114,10 @@ class RuntimeConfig:
         if self.snapshot_keep_last and not self.snapshot_dir:
             raise ValueError("snapshot_keep_last prunes on-disk snapshots; "
                              "it requires snapshot_dir")
+        # normalize + validate eagerly so a bad trace spec fails at
+        # construction, not at the first sampled event
+        from repro.runtime.trace import normalize_trace
+        normalize_trace(self.trace)
 
 
 def config_from_legacy(*args, **kwargs) -> RuntimeConfig:

@@ -71,6 +71,7 @@ and unsubscribes retired ones.
 """
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 import time
@@ -79,8 +80,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.runtime import trace as trace_mod
 from repro.runtime.messages import (Channel, EpochBeginMsg, EpochMsg,
                                     InstallMsg)
+
+log = logging.getLogger("repro.runtime.membership")
 
 # "infinitely caught up": a retired slot's frontier contribution
 INF_CLOCK = 1 << 60
@@ -264,6 +268,8 @@ class MembershipManager:
         self._await_installs(set(removed), epoch, deadline)
         rt.partition = part
         self.log.append((epoch, part.active))
+        if rt.trace_on:
+            rt._trace.point(trace_mod.EV_EPOCH, epoch, part.A)
         # durability tier: retiring slots already sealed their WAL segments
         # shard-side at the cut (step 3, stamped with their final vc); the
         # runtime hook just records the per-slot log positions of this cut
@@ -276,10 +282,14 @@ class MembershipManager:
     def _next_msg(self, deadline: float, what: str):
         budget = deadline - time.monotonic()
         if budget <= 0:
+            log.warning("membership op timed out waiting for %s "
+                        "(epoch %d active)", what, self.rt.partition.epoch)
             raise RuntimeError(f"membership op timed out waiting for {what}")
         try:
             return self.inbox.get(timeout=budget)
         except queue.Empty:
+            log.warning("membership op timed out waiting for %s "
+                        "(epoch %d active)", what, self.rt.partition.epoch)
             raise RuntimeError(
                 f"membership op timed out waiting for {what}") from None
 
@@ -317,6 +327,9 @@ class MembershipManager:
                         raise ValueError(f"unknown membership op {ev.op!r}")
                     plan.results.append((ev, "ok"))
                 except BaseException as e:
+                    log.warning("scripted membership op %s(sid=%s) at clock "
+                                "%d failed: %r — plan driver stopping",
+                                ev.op, ev.sid, ev.clock, e)
                     plan.results.append((ev, f"error: {e!r}"))
                     rt._record_error(e)
                     return

@@ -172,6 +172,12 @@ class RuntimeMetrics:
     processes: List[ProcessMetrics] = field(default_factory=list)
     replicas: List[ReplicaMetrics] = field(default_factory=list)
     gateways: List[GatewayMetrics] = field(default_factory=list)
+    # tracing tier (repro.runtime.trace): whether sampled event tracing is
+    # on, and how many events the bounded rings have dropped so far (0 is
+    # the healthy steady state; a growing count means the rings are
+    # undersized for the sample rate)
+    trace_enabled: bool = False
+    trace_dropped: int = 0
 
     # ------------------------------------------------------------- derived
     def active_shards(self) -> List[ShardMetrics]:
@@ -404,4 +410,6 @@ class MetricsHub:
             processes=self._collect_procs(loads, dt),
             replicas=reps,
             gateways=gws,
+            trace_enabled=rt.trace_on,
+            trace_dropped=(rt._trace.dropped() if rt.trace_on else 0),
         )

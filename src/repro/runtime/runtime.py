@@ -77,6 +77,7 @@ import numpy as np
 
 from repro.core import controller
 from repro.core.server import RunStats
+from repro.runtime import trace as trace_mod
 from repro.runtime import transport as T
 from repro.runtime.config import (TRANSPORTS, RuntimeConfig,
                                   config_from_legacy)
@@ -392,6 +393,8 @@ class _WorkerFlowMixin:
         """
         if not outbox:
             return
+        trc = self._trace if self.trace_on else None
+        t0_ns = time.monotonic_ns() if trc is not None else 0
         n_parts = 0
         with proc.route_lock:
             part = proc.part
@@ -411,11 +414,17 @@ class _WorkerFlowMixin:
                                     key, rows, sub, part.epoch)
                     pairs.append((self._chan_ps[proc.pid][sid], msg))
                     n_parts += 1
+                    if trc is not None and trc.sampled(msg.uid):
+                        # lifeline start: joined to the shard's apply_part
+                        # on (proc, uid), which the wire already carries
+                        trc.point(trace_mod.EV_SEND, proc.pid, msg.uid, key)
             for chan, msgs in group_by_channel(pairs):
                 self._send_many(chan, msgs)
         if n_parts:
             with self._slock:
                 self._parts_sent[proc.pid] += n_parts
+            if trc is not None:
+                trc.span(trace_mod.EV_FLUSH, t0_ns, proc.pid, clock, n_parts)
 
     def _clock_gate(self, w: int, clock: int, proc: ClientProcess) -> None:
         """Block until the delivery frontier admits this period (clock bound)."""
@@ -426,9 +435,17 @@ class _WorkerFlowMixin:
             return
         t0 = time.monotonic()
         blocked = False
+        strag = -1
         with proc.cond:
             while proc.frontier_min() < need:
                 blocked = True
+                if self.trace_on:
+                    # who is holding the frontier right now?  the peer whose
+                    # slowest slot mark is lowest (recomputed each wait lap,
+                    # so the span blames the last straggler observed)
+                    peers = [p for p in range(self.n_proc) if p != proc.pid]
+                    strag = peers[int(proc.marks[peers, :]
+                                      .min(axis=1).argmin())]
                 self._check_alive()
                 proc.cond.wait(0.25)
             if self.check:
@@ -445,6 +462,9 @@ class _WorkerFlowMixin:
             with self._slock:
                 self.stats.block_time_clock += dt
                 proc.m_block_clock += dt
+            if self.trace_on:
+                self._trace.span(trace_mod.EV_BLOCK_CLOCK, int(t0 * 1e9),
+                                 proc.pid, w, strag)
 
     def _apply_update(self, w: int, clock: int, proc: ClientProcess,
                       key: str, delta: np.ndarray) -> np.ndarray:
@@ -485,6 +505,9 @@ class _WorkerFlowMixin:
                     if mx > bound + 1e-9:
                         self.stats.violations.append(
                             f"VAP violation: worker {w} unsynced {mx} > {bound}")
+        if blocked and self.trace_on:
+            self._trace.span(trace_mod.EV_BLOCK_VALUE, int(t0 * 1e9),
+                             proc.pid, w, clock)
         return d2
 
     def _on_clock(self, w: int, clock: int, proc: ClientProcess,
@@ -517,6 +540,9 @@ class _WorkerFlowMixin:
                 load[LOAD_UPDATES] = proc.m_updates
                 load[LOAD_BLOCK_CLOCK] = proc.m_block_clock
                 load[LOAD_BLOCK_VALUE] = proc.m_block_value
+            if self.trace_on:
+                for c in advanced:
+                    self._trace.point(trace_mod.EV_CLOCK, proc.pid, c)
             # ClockMsg routes by the current partition too; if the epoch
             # swapped between the update flush above and here, the old
             # owner's missing clock only *under*-states its applied vc
@@ -596,6 +622,13 @@ class PSRuntime(_WorkerFlowMixin):
         self.zero_copy = True if cfg.zero_copy is None else bool(cfg.zero_copy)
         self.ps_kernels = bool(cfg.ps_kernels)
         self.metrics_on = bool(cfg.metrics)
+        # tracing tier (repro.runtime.trace): one hub for the parent (server
+        # shards + queue-mode workers); forked clients build their own hub
+        # post-fork and ship their rings back in the quiesce payload
+        self._trace_cfg = trace_mod.normalize_trace(cfg.trace)
+        self.trace_on = self._trace_cfg is not None
+        self._trace = (trace_mod.TraceHub(self._trace_cfg, "server")
+                       if self.trace_on else None)
 
         # canonical (R, C) float64 master shapes; original shapes for reads
         self._shapes: Dict[str, Tuple[int, ...]] = {}
@@ -835,10 +868,11 @@ class PSRuntime(_WorkerFlowMixin):
             conns = self._transport.accept_all(self._deadline)
             self._conns = conns
             for (p, s), conn in conns.items():
-                self._chan_sp[s][p] = T.WireChannel(f"s{s}->p{p}", conn.write)
+                self._chan_sp[s][p] = T.WireChannel(f"s{s}->p{p}", conn.write,
+                                                    trace=self._trace)
                 self._readers.append(T.start_reader(
                     f"rx-p{p}s{s}", conn.read_chunk, self.shards[s].inbox,
-                    on_reader_error))
+                    on_reader_error, trace=self._trace))
         else:
             self._reader_stop = threading.Event()
             codec = T.RowCodec(list(self._x0.keys())) if self.zero_copy \
@@ -853,23 +887,26 @@ class PSRuntime(_WorkerFlowMixin):
                         f"s{s}->p{p}",
                         T.ring_parts_writer(edge.s2c, self._deadline),
                         max_frame=self._shm_max_frame, codec=codec,
-                        on_flush=lambda w=bell_w: T.ShmEdge.ring_bell(w))
+                        on_flush=lambda w=bell_w: T.ShmEdge.ring_bell(w),
+                        trace=self._trace)
                     self._readers.append(T.start_view_reader(
                         f"rx-p{p}s{s}",
                         T.RingViewReader(edge.c2s, codec, edge.c2s_bell[0],
-                                         self._reader_stop),
+                                         self._reader_stop,
+                                         trace=self._trace),
                         self.shards[s].inbox, on_reader_error))
                 else:
                     self._chan_sp[s][p] = T.WireChannel(
                         f"s{s}->p{p}",
                         T.ring_writer(edge.s2c, edge.s2c_bell[1],
                                       self._deadline),
-                        max_frame=self._shm_max_frame)
+                        max_frame=self._shm_max_frame, trace=self._trace)
                     self._readers.append(T.start_reader(
                         f"rx-p{p}s{s}",
                         T.ring_reader(edge.c2s, edge.c2s_bell[0],
                                       self._reader_stop),
-                        self.shards[s].inbox, on_reader_error))
+                        self.shards[s].inbox, on_reader_error,
+                        trace=self._trace))
         for s in self.shards:
             s.thread.start()
 
@@ -991,6 +1028,9 @@ class PSRuntime(_WorkerFlowMixin):
                 self._total[k] += v
             self._parts_sent[pid] = fin.get("parts_sent", 0)
             self._final_caches[pid] = fin["cache"]
+            tr = fin.get("trace")
+            if tr and self._trace is not None:
+                self._trace.adopt(tr)
             clock_times.append(st.clock_times)
         if clock_times and all(clock_times):
             n = min(len(c) for c in clock_times)
@@ -1069,6 +1109,47 @@ class PSRuntime(_WorkerFlowMixin):
         ``rset.pub_drops``...) keep working but are deprecated as read
         APIs; new consumers (autoscaler, benches, demos) use this."""
         return self._metrics_hub.collect()
+
+    # ------------------------------------------------------------- tracing
+    def _require_trace(self) -> "trace_mod.TraceHub":
+        if self._trace is None:
+            raise RuntimeError(
+                "tracing is off; construct the runtime with "
+                "RuntimeConfig(trace=True) (or a sample rate / TraceConfig) "
+                "to record events")
+        return self._trace
+
+    def dump_trace(self, path: str) -> dict:
+        """Export the recorded event log as Chrome trace-event JSON —
+        load it at https://ui.perfetto.dev.  One track per thread per
+        process; update lifelines ride flow events (client send -> shard
+        apply -> replica ingest).  Proc-mode client rings only ship at
+        quiesce, so call after :meth:`wait` to see the client side.
+        Returns ``{"events":, "dropped":, "path":}``."""
+        return trace_mod.dump_chrome_trace(self._require_trace(), path)
+
+    def explain_read(self, result) -> dict:
+        """Consistency audit: why did this
+        :class:`~repro.runtime.serving.gateway.ReadResult` land where it
+        did — names the lagging ``(shard, proc)`` pair and the vc gap that
+        forced an escalation.  Pure function of the result's audit stamps
+        (works with tracing off)."""
+        return trace_mod.explain_read(result)
+
+    def explain_block(self, process: Optional[int] = None,
+                      worker: Optional[int] = None) -> dict:
+        """Attribute recorded clock/value stalls to the straggler process
+        the workers waited on (requires tracing)."""
+        return trace_mod.explain_block(self._require_trace(),
+                                       process=process, worker=worker)
+
+    def staleness_timeline(self, shard: int) -> dict:
+        """Measured master−replica staleness over time for one shard,
+        against the policy's clock bound (requires tracing + serving)."""
+        bound = (self.policy.staleness if self.policy.clock_bounded
+                 else None)
+        return trace_mod.staleness_timeline(self._require_trace(), shard,
+                                            bound=bound)
 
     # ------------------------------------------------------------- reads
     def read(self, key: str, process: int = 0) -> np.ndarray:
@@ -1243,6 +1324,13 @@ class _ClientHost(_WorkerFlowMixin):
         # fork-safe); the kernel paths run in the parent and in queue mode
         self.ps_kernels = False
         self.metrics_on = rt.metrics_on
+        # fresh hub post-fork: the fork-copied parent hub (and its rings)
+        # belongs to the parent timeline; this process records into its own
+        # and ships the rings back in the quiesce payload
+        self._trace_cfg = rt._trace_cfg
+        self.trace_on = rt.trace_on
+        self._trace = (trace_mod.TraceHub(self._trace_cfg, f"client-p{pid}")
+                       if self.trace_on else None)
         self.n_shards = rt.n_shards
         self.n_slots = rt.n_slots
         self.n_proc = rt.n_proc
@@ -1275,10 +1363,11 @@ class _ClientHost(_WorkerFlowMixin):
             chans = []
             for s in range(rt.n_slots):
                 conn = self._conns[s]
-                chans.append(T.WireChannel(f"p{pid}->s{s}", conn.write))
+                chans.append(T.WireChannel(f"p{pid}->s{s}", conn.write,
+                                           trace=self._trace))
                 self._readers.append(T.start_reader(
                     f"rx-s{s}", conn.read_chunk, self.proc.inbox,
-                    self._record_error))
+                    self._record_error, trace=self._trace))
         else:
             self._stop = threading.Event()
             codec = T.RowCodec(list(self._x0.keys())) if rt.zero_copy \
@@ -1292,22 +1381,24 @@ class _ClientHost(_WorkerFlowMixin):
                         f"p{pid}->s{s}",
                         T.ring_parts_writer(edge.c2s, self._deadline),
                         max_frame=rt._shm_max_frame, codec=codec,
-                        on_flush=lambda w=bell_w: T.ShmEdge.ring_bell(w)))
+                        on_flush=lambda w=bell_w: T.ShmEdge.ring_bell(w),
+                        trace=self._trace))
                     self._readers.append(T.start_view_reader(
                         f"rx-s{s}",
                         T.RingViewReader(edge.s2c, codec, edge.s2c_bell[0],
-                                         self._stop),
+                                         self._stop, trace=self._trace),
                         self.proc.inbox, self._record_error))
                 else:
                     chans.append(T.WireChannel(
                         f"p{pid}->s{s}",
                         T.ring_writer(edge.c2s, edge.c2s_bell[1],
                                       self._deadline),
-                        max_frame=rt._shm_max_frame))
+                        max_frame=rt._shm_max_frame, trace=self._trace))
                     self._readers.append(T.start_reader(
                         f"rx-s{s}", T.ring_reader(edge.s2c, edge.s2c_bell[0],
                                                   self._stop),
-                        self.proc.inbox, self._record_error))
+                        self.proc.inbox, self._record_error,
+                        trace=self._trace))
         self._channels = chans
         self._chan_ps = {pid: chans}
 
@@ -1396,6 +1487,8 @@ class _ClientHost(_WorkerFlowMixin):
             "total": self._total,
             "cache": self.proc.cache,
             "parts_sent": int(self._parts_sent[self.pid]),
+            "trace": (self._trace.export() if self._trace is not None
+                      else None),
             "errors": [repr(e) for e in self._errors],
         }
 

@@ -23,6 +23,7 @@ the master**, so the SLO is met by construction and the stamp on every
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from dataclasses import dataclass, field
@@ -30,11 +31,23 @@ from typing import Dict, Optional, Union
 
 import numpy as np
 
+from repro.runtime import trace as trace_mod
 from repro.runtime.metrics import slo_key
 from repro.runtime.serving.replica import ReplicaSet
 
 FRESH = "fresh"                  # sentinel SLO: serve the master state
 Slo = Union[int, str, None]
+
+log = logging.getLogger("repro.runtime.serving.gateway")
+
+
+def _slo_code(slo: Slo) -> int:
+    """The integer trace encoding of an SLO (trace.SLO_ANY / SLO_FRESH)."""
+    if slo is None:
+        return trace_mod.SLO_ANY
+    if slo == FRESH:
+        return trace_mod.SLO_FRESH
+    return int(slo)
 
 
 class ReadShedError(RuntimeError):
@@ -58,6 +71,13 @@ class ReadResult:
     slo: Slo                     # what the client asked for
     escalated: bool              # no replica qualified before the deadline
     waited_s: float              # wall time from request to response
+    # consistency audit stamps (rt.explain_read): on an escalated read, the
+    # (slot, process) cell of the best candidate replica's vector clock that
+    # trailed the master frontier furthest at escalation time, and by how
+    # many clocks.  -1/-1/0 when the read never escalated.
+    lag_shard: int = -1
+    lag_proc: int = -1
+    vc_gap: int = 0
 
 
 @dataclass
@@ -108,19 +128,31 @@ class ReadGateway:
         self.read_cache = read_cache
         self._cache: Dict[str, tuple] = {}
         reg = getattr(rt, "_gateways", None)
+        self._gw_id = len(reg) if reg is not None else 0
         if reg is not None:                  # unified metrics registry
             reg.append(self)
 
     # ------------------------------------------------------------ admission
     def set_shed_fresh(self, shed: bool) -> None:
         """Engage/release fresh-read shedding (SLO-aware admission)."""
-        self.shed_fresh = bool(shed)
+        shed = bool(shed)
+        if shed != self.shed_fresh:
+            if shed:
+                log.warning("gateway %d: fresh-read shedding ENGAGED — "
+                            "master hot, fresh reads now refused with "
+                            "ReadShedError", self._gw_id)
+            else:
+                log.info("gateway %d: fresh-read shedding released",
+                         self._gw_id)
+        self.shed_fresh = shed
 
     # ---------------------------------------------------------------- reads
     def read(self, key: str, slo: Slo = None,
              timeout: float = 30.0) -> ReadResult:
         """Serve one read under the declared staleness SLO (module doc)."""
         t0 = time.monotonic()
+        rt = self.rt
+        trc = rt._trace if rt.trace_on else None
         with self._slock:
             k = slo_key(slo)
             self.stats.reads_by_slo[k] = self.stats.reads_by_slo.get(k, 0) + 1
@@ -129,7 +161,11 @@ class ReadGateway:
                 with self._slock:
                     self.stats.n_shed += 1
                 raise ReadShedError(key)
-            return self._serve_master(key, slo, t0, escalated=False)
+            res = self._serve_master(key, slo, t0, escalated=False)
+            if trc is not None:
+                trc.point(trace_mod.EV_READ, _slo_code(slo), res.staleness,
+                          res.source)
+            return res
         bound = float("inf") if slo is None else int(slo)
         if bound < 0:
             raise ValueError(f"slo must be >= 0 or {FRESH!r}, got {slo!r}")
@@ -149,7 +185,13 @@ class ReadGateway:
             fails += 1
             now = time.monotonic()
             if now >= deadline:
+                # audit stamp BEFORE the master copy: the lagging cell is
+                # measured at the moment escalation was decided
+                lag = self._lag_info()
+                if trc is not None:
+                    trc.point(trace_mod.EV_ESCALATE, self._gw_id, 0, key)
                 res = self._serve_master(key, slo, t0, escalated=True)
+                res.lag_shard, res.lag_proc, res.vc_gap = lag
                 break
             with rset.cond:
                 # version guard: a doorbell rung during the FIRST failed
@@ -162,10 +204,37 @@ class ReadGateway:
                     t_w = time.monotonic()
                     rset.cond.wait(min(0.25, deadline - now))
                     blocked += time.monotonic() - t_w
+                    if trc is not None:
+                        trc.span(trace_mod.EV_PARK, int(t_w * 1e9),
+                                 self._gw_id, 0, key)
         if blocked:
             with self._slock:
                 self.stats.block_time += blocked
+        if trc is not None:
+            trc.point(trace_mod.EV_READ, _slo_code(slo), res.staleness,
+                      res.source)
         return res
+
+    def _lag_info(self) -> tuple:
+        """The (slot, process, gap) cell that forced this escalation: over
+        the live replicas, take the BEST candidate (smallest worst-case vc
+        gap vs the master frontier) and name the cell where even it trailed
+        furthest.  (-1, -1, 0) when no live replica exists at all."""
+        rset = self.replicas
+        mvc = rset.master_vc()
+        best = None
+        for rep in rset.replicas:
+            if rep.poisoned or rep.retired:
+                continue
+            gap = mvc - rep.vc
+            worst = int(gap.max())
+            if best is None or worst < best[0]:
+                s, p = np.unravel_index(int(gap.argmax()), gap.shape)
+                best = (worst, int(s), int(p))
+        if best is None:
+            return (-1, -1, 0)
+        worst, s, p = best
+        return (s, p, max(worst, 0))
 
     def _try_cache(self, key: str, bound: float, slo: Slo,
                    t0: float) -> Optional[ReadResult]:

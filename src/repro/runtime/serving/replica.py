@@ -40,6 +40,7 @@ re-partition path, so it can serve honestly-stamped stale reads before the
 """
 from __future__ import annotations
 
+import logging
 import os
 import queue
 import socket
@@ -50,6 +51,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.runtime import snapshot as SNAP
+from repro.runtime import trace as trace_mod
 from repro.runtime import transport as T
 from repro.runtime.messages import (SHUTDOWN, Channel, ReplicaDeltaMsg,
                                     ReplicaFinMsg, ReplicaStateMsg,
@@ -57,6 +59,8 @@ from repro.runtime.messages import (SHUTDOWN, Channel, ReplicaDeltaMsg,
                                     UnsubscribeMsg, pump_inbox)
 
 SERVING_TRANSPORTS = ("queue", "shm", "tcp")
+
+log = logging.getLogger("repro.runtime.serving.replica")
 
 
 class Replica:
@@ -114,27 +118,38 @@ class Replica:
         pump_inbox(self.inbox, self._handle_batch)
 
     def _handle_batch(self, batch: list) -> bool:
+        rt = self.rset.rt
+        trc = rt._trace if rt.trace_on else None
+        t0 = time.monotonic_ns() if trc is not None else 0
         vc_moved = False
         shutdown = False
+        n_handled = 0
         with self.lock:
             for msg in batch:
                 if msg is SHUTDOWN:
                     shutdown = True
                     break
                 try:
-                    vc_moved |= self._handle(msg)
+                    vc_moved |= self._handle(msg, trc)
+                    n_handled += 1
                 except BaseException as e:
                     # a partially applied message breaks the vc invariant
                     # ("vc[p]=c => every update <= c applied"): take this
                     # replica out of the serving rotation for good rather
                     # than stamping corrupt values as fresh
                     self.poisoned = True
+                    log.warning(
+                        "replica %d poisoned by ingest failure (%s: %s) — "
+                        "out of the serving rotation for good",
+                        self.rid, type(e).__name__, e)
                     self.rset._record_error(e)
+        if trc is not None and n_handled:
+            trc.span(trace_mod.EV_INGEST, t0, self.rid, n_handled)
         if vc_moved:
             self.rset._notify()             # gateway doorbell
         return shutdown
 
-    def _handle(self, msg) -> bool:
+    def _handle(self, msg, trc=None) -> bool:
         """Apply one publish message; returns True if the vc moved.
         Caller holds ``self.lock``."""
         if self.rset.check:
@@ -144,6 +159,11 @@ class Replica:
                     f"FIFO violation: shard {msg.shard}->replica "
                     f"{self.rid} {err}")
         if isinstance(msg, ReplicaDeltaMsg):
+            if trc is not None and trc.sampled(msg.seq):
+                # flow end of the publish lifeline started at the shard's
+                # EV_PUBLISH_PART; sampled on seq so both ends agree
+                trc.point(trace_mod.EV_INGEST_PART, msg.shard, msg.seq,
+                          self.rid)
             # rows may repeat across coalesced source parts: accumulate.
             # Rows whose last cut epoch is newer than the delta's epoch
             # already contain it (see row_epoch above): drop them.
@@ -161,6 +181,8 @@ class Replica:
         if isinstance(msg, ReplicaVcMsg):
             np.maximum(self.vc[msg.shard], msg.clock_vc,
                        out=self.vc[msg.shard])
+            if trc is not None:
+                self._trace_vc(trc, msg.shard)
             return True
         if isinstance(msg, ReplicaStateMsg):
             # in-stream bootstrap: overwrite this shard's partition rows
@@ -171,11 +193,22 @@ class Replica:
                     self.row_epoch[key][part["rows"]] = msg.epoch
             np.maximum(self.vc[msg.shard], msg.clock_vc,
                        out=self.vc[msg.shard])
+            if trc is not None:
+                self._trace_vc(trc, msg.shard)
             return True
         if isinstance(msg, ReplicaFinMsg):
             self.fins.add(msg.shard)
             return True                     # wakes close()'s fin wait
         raise TypeError(f"replica {self.rid}: unexpected message {msg!r}")
+
+    def _trace_vc(self, trc, shard: int) -> None:
+        """Record the measured master-replica staleness for one shard after
+        a vc adoption (trace-gated; feeds ``staleness_timeline``).  Safe
+        under ``self.lock``: ``master_vc`` takes shard locks and shard
+        threads never take a replica's."""
+        mvc = self.rset.master_vc()[shard]
+        lag = max(int((mvc - self.vc[shard]).max()), 0)
+        trc.point(trace_mod.EV_REPLICA_VC, self.rid, shard, lag)
 
     # ------------------------------------------------------------ serving
     def serve(self, key: str) -> Tuple[np.ndarray, np.ndarray]:

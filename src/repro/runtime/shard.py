@@ -76,6 +76,7 @@ by uid under the per-process clock frontier instead of double-applying.
 """
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 import time
@@ -85,6 +86,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core import controller
+from repro.runtime import trace as trace_mod
 from repro.runtime.membership import INF_CLOCK
 from repro.runtime.messages import (SHUTDOWN, AckBatchMsg, AckMsg, Channel,
                                     ClockMarker, ClockMsg, DeliverMsg,
@@ -94,6 +96,8 @@ from repro.runtime.messages import (SHUTDOWN, AckBatchMsg, AckMsg, Channel,
                                     ShardFinMsg, SubscribeMsg, UnsubscribeMsg,
                                     UpdateMsg, group_by_channel, pump_inbox)
 from repro.runtime.transport import FifoAssert, materialize_msg, release_msgs
+
+log = logging.getLogger("repro.runtime.shard")
 
 _BATCH = 256        # max messages coalesced per apply/dispatch cycle
 
@@ -213,6 +217,7 @@ class ServerShard:
         shutdown = False
         done = 0
         held = 0
+        t_batch = time.monotonic_ns() if rt.trace_on else 0
         run: List[UpdateMsg] = []
         for msg in batch:
             if msg is SHUTDOWN:
@@ -248,6 +253,8 @@ class ServerShard:
             self._flush_publish()
         except BaseException as e:
             rt._record_error(e)
+        if rt.trace_on and done:
+            rt._trace.span(trace_mod.EV_SHARD_BATCH, t_batch, self.sid, done)
         # zero-copy discipline: every view consumed by the applies above is
         # done with, and everything retained (held/queued/pending/publish/
         # outbox) was materialized — release the frame pins BEFORE the
@@ -433,6 +440,10 @@ class ServerShard:
                         epoch=msg.epoch)]):
                     self._stale_subs = self._stale_subs | {rid}
                     self.pub_drops += 1
+                    log.warning(
+                        "shard %d: replica %d re-bootstrap after epoch %d "
+                        "install dropped on a full sink — marked stale for "
+                        "resync", self.sid, rid, msg.epoch)
         self._vc_dirty = True
         rt.membership.inbox.put(("installed", self.sid, msg.epoch))
 
@@ -451,6 +462,7 @@ class ServerShard:
                    if self._dedup.fresh(m.uid, m.process, m.ts)]
             if not run:
                 return
+        trc = rt._trace if rt.trace_on else None
         by_key: Dict[str, List[UpdateMsg]] = {}
         n_rows = n_bytes = 0
         for msg in run:
@@ -458,13 +470,27 @@ class ServerShard:
             self.applied_parts[msg.process] += 1
             n_rows += msg.rows.size
             n_bytes += msg.nbytes
+            if trc is not None and trc.sampled(msg.uid):
+                # lifeline landing: joins the client's send_part on
+                # (proc, uid).  Fresh parts only — the dedup filter above
+                # already dropped replays, so with sample=1.0 these points
+                # reconcile exactly with sum(applied_parts).
+                trc.point(trace_mod.EV_APPLY_PART, msg.process, msg.uid,
+                          self.sid)
+        t_apply = time.monotonic_ns() if trc is not None else 0
         # apply-lock wait: how long the dense blocks were contended (master
         # reads, migration cuts).  One extra monotonic() pair per *batch*,
-        # and only with metrics on — the <3% overhead gate covers this.
-        t_lock = time.monotonic() if rt.metrics_on else 0.0
+        # and only with metrics/trace on — the overhead gates cover this.
+        t_lock = time.monotonic() if (rt.metrics_on or trc is not None) \
+            else 0.0
         with self.lock:
             if t_lock:
-                self.m_lock_wait += time.monotonic() - t_lock
+                dt_lock = time.monotonic() - t_lock
+                if rt.metrics_on:
+                    self.m_lock_wait += dt_lock
+                if trc is not None and dt_lock > 1e-6:
+                    trc.span(trace_mod.EV_LOCK_WAIT, int(t_lock * 1e9),
+                             self.sid)
             self.m_rows_applied += n_rows
             self.m_bytes_applied += n_bytes
             A = self.part.A
@@ -504,7 +530,13 @@ class ServerShard:
                 # are encoded to owned bytes here (ring views are only
                 # valid while this cycle's pins are held) and written out
                 # at the next clock-boundary group commit
+                t_wal = time.monotonic_ns() if trc is not None else 0
                 self.wal.log_parts(run)
+                if trc is not None:
+                    trc.span(trace_mod.EV_WAL_APPEND, t_wal, self.sid,
+                             len(run))
+        if trc is not None:
+            trc.span(trace_mod.EV_APPLY, t_apply, self.sid, len(run), n_rows)
         for msg in run:
             self._route_delivery(msg)
 
@@ -637,6 +669,11 @@ class ServerShard:
         else:
             self._stale_subs = self._stale_subs | {msg.replica}
             self.pub_drops += 1
+            log.warning(
+                "shard %d: replica %d subscribed on a wedged sink — "
+                "bootstrap dropped, replica starts stale until the resync "
+                "path gets through (epoch %d)", self.sid, msg.replica,
+                self.part.epoch)
 
     def _on_unsubscribe(self, msg: UnsubscribeMsg) -> None:
         chan = self.subscribers.pop(msg.replica, None)
@@ -671,6 +708,10 @@ class ServerShard:
                 epoch=self.part.epoch)]):
             self._stale_subs = self._stale_subs - {rid}
             self.pub_resyncs += 1
+            log.info(
+                "shard %d: replica %d resynced — in-stream re-bootstrap "
+                "delivered after its sink drained (epoch %d, resyncs %d)",
+                self.sid, rid, self.part.epoch, self.pub_resyncs)
 
     def _flush_publish(self) -> None:
         """Publish this cycle's coalesced deltas + (if the applied frontier
@@ -678,8 +719,11 @@ class ServerShard:
         channels are serving-owned: sends bypass the runtime's in-flight
         quiesce accounting on purpose, and they never block the shard — a
         full sink marks the replica stale for drop-and-resync."""
+        rt = self.rt
+        trc = rt._trace if rt.trace_on else None
         vc_dirty, self._vc_dirty = self._vc_dirty, False
         if self.subscribers:
+            t_pub = time.monotonic_ns() if trc is not None else 0
             self.m_last_publish = time.monotonic()
             stamp = self.vc_snapshot() if vc_dirty else None
             for rid, chan in self.subscribers.items():
@@ -693,6 +737,24 @@ class ServerShard:
                 if msgs and not self._publish_send(chan, msgs):
                     self._stale_subs = self._stale_subs | {rid}   # wedged:
                     self.pub_drops += 1         # drop now, resync later
+                    log.warning(
+                        "shard %d: replica %d publish sink full — marking "
+                        "stale, dropping this cycle's deltas and retrying a "
+                        "full re-bootstrap each cycle (epoch %d, drops so "
+                        "far %d)", self.sid, rid, self.part.epoch,
+                        self.pub_drops)
+                elif trc is not None and msgs:
+                    # publish lifeline: seqs were stamped by the send, so
+                    # the replica's ingest joins on (shard, replica, seq)
+                    for m in msgs:
+                        if (type(m) is ReplicaDeltaMsg
+                                and trc.sampled(m.seq)):
+                            trc.point(trace_mod.EV_PUBLISH_PART, self.sid,
+                                      m.seq, rid)
+            if trc is not None:
+                stamp_min = int(stamp.min()) if stamp is not None else -1
+                trc.span(trace_mod.EV_PUBLISH, t_pub, self.sid, stamp_min,
+                         len(self.subscribers))
         elif self._pub:
             self._pub.clear()
         if vc_dirty:
@@ -701,7 +763,12 @@ class ServerShard:
                 # + a vc stamp, FIFO on disk exactly like the publish
                 # stream (WAL-before-snapshot: the commit precedes any
                 # periodic snapshot this boundary triggers)
-                self.wal.commit(self.vc_snapshot())
+                vc = self.vc_snapshot()
+                t_wal = time.monotonic_ns() if trc is not None else 0
+                self.wal.commit(vc)
+                if trc is not None:
+                    trc.span(trace_mod.EV_WAL_COMMIT, t_wal, self.sid,
+                             int(vc.min()))
             self.rt._maybe_periodic_snapshot()
 
     # ------------------------------------------------------------- snapshots

@@ -59,6 +59,7 @@ corruption after the fact.
 """
 from __future__ import annotations
 
+import logging
 import os
 import pickle
 import platform
@@ -75,7 +76,10 @@ from multiprocessing import shared_memory
 
 import numpy as np
 
+from repro.runtime import trace as trace_mod
 from repro.runtime.messages import DeliverMsg, UpdateMsg
+
+log = logging.getLogger("repro.runtime.transport")
 
 _U32 = struct.Struct("<I")
 _U64 = struct.Struct("<Q")
@@ -423,12 +427,15 @@ class RingViewReader:
     """
 
     def __init__(self, ring: "ShmRing", codec: RowCodec, bell_r: int,
-                 stop: threading.Event):
+                 stop: threading.Event,
+                 trace: Optional["trace_mod.TraceHub"] = None):
         self.ring = ring
         self.codec = codec
         self.bell_r = bell_r
         self.stop = stop
         self.closed = False
+        self.trace = trace
+        self._warned_stale = False
         self._pos = 0          # absolute decode cursor
         self._released = 0     # absolute head we last published
         self._pending: deque = deque()   # pinned FrameHandles, stream order
@@ -461,12 +468,20 @@ class RingViewReader:
     def _decode_ready(self) -> list:
         out: list = []
         cap = self.ring.capacity
+        t0 = time.monotonic_ns() if self.trace is not None else 0
         while not self.closed:
             tail = self.ring._tail()
             # validate the cross-process cursor read exactly like
             # ShmRing.read_available: a stale/torn value must never reach
             # the arithmetic below (it would replay or overrun the stream)
             if tail < self._pos or tail - self._released > cap:
+                if not self._warned_stale:
+                    self._warned_stale = True
+                    log.warning(
+                        "shm view reader: stale cross-process tail cursor "
+                        "read (tail=%d decode_pos=%d released=%d cap=%d); "
+                        "treating as empty and retrying [warned once per "
+                        "ring]", tail, self._pos, self._released, cap)
                 break
             if tail - self._pos < 4:
                 break
@@ -505,6 +520,9 @@ class RingViewReader:
                     self._pos = end
                     self._advance_locked()
             out.extend(msgs)
+        if out and self.trace is not None:
+            self.trace.span(trace_mod.EV_WIRE_DECODE, t0, len(out), 0,
+                            threading.current_thread().name)
         return out
 
     def read_msgs(self) -> Optional[list]:
@@ -563,7 +581,8 @@ class WireChannel:
                  try_write: Optional[Callable[[bytes], bool]] = None,
                  room: Optional[Callable[[], int]] = None,
                  codec: Optional[RowCodec] = None,
-                 on_flush: Optional[Callable[[], None]] = None):
+                 on_flush: Optional[Callable[[], None]] = None,
+                 trace: Optional["trace_mod.TraceHub"] = None):
         self.name = name
         self._write = write
         self._max_frame = max_frame    # soft cap: split batches above this
@@ -574,6 +593,7 @@ class WireChannel:
         self._codec = codec            # raw row-block encoding (zero-copy)
         self._on_flush = on_flush      # rung once per send_many, not per
                                        # frame (batched doorbell wakes)
+        self._trace = trace
 
     def send(self, msg) -> None:
         self.send_many([msg])
@@ -581,6 +601,8 @@ class WireChannel:
     def send_many(self, msgs: list) -> None:
         if not msgs:
             return
+        trc = self._trace
+        t0 = time.monotonic_ns() if trc is not None else 0
         with self._lock:
             for m in msgs:
                 m.seq = self._seq
@@ -588,6 +610,8 @@ class WireChannel:
             self._write_frames(msgs)
             if self._on_flush is not None:
                 self._on_flush()
+        if trc is not None:
+            trc.span(trace_mod.EV_WIRE_WRITE, t0, len(msgs), 0, self.name)
 
     # -------------------------------------------------- non-blocking sends
     @property
@@ -659,10 +683,12 @@ class WireChannel:
 
 def _reader_loop(read_chunk: Callable[[], Optional[bytes]],
                  inbox: queue.Queue,
-                 on_error: Callable[[BaseException], None]) -> None:
+                 on_error: Callable[[BaseException], None],
+                 trace: Optional["trace_mod.TraceHub"] = None) -> None:
     """Pump a byte source into an inbox until EOF. `read_chunk` returns b''
     to mean try-again (ring empty) and None on hard end-of-stream."""
     dec = FrameDecoder()
+    tname = threading.current_thread().name
     try:
         while not dec.closed:
             chunk = read_chunk()
@@ -670,7 +696,11 @@ def _reader_loop(read_chunk: Callable[[], Optional[bytes]],
                 break
             if not chunk:
                 continue
-            for msg in dec.feed(chunk):
+            t0 = time.monotonic_ns() if trace is not None else 0
+            msgs = dec.feed(chunk)
+            if msgs and trace is not None:
+                trace.span(trace_mod.EV_WIRE_DECODE, t0, len(msgs), 0, tname)
+            for msg in msgs:
                 inbox.put(msg)
     except BaseException as e:      # surfaced into RunStats by the runtime
         on_error(e)
@@ -864,6 +894,7 @@ class ShmRing:
         self.shm = shm
         self.capacity = capacity
         self.buf = shm.buf
+        self._warned_stale = False
 
     @classmethod
     def create(cls, capacity: int) -> "ShmRing":
@@ -910,6 +941,13 @@ class ShmRing:
         cursors are monotone: a sane reading always comes around)."""
         used = self._tail() - self._head()
         if used < 0 or used > self.capacity:
+            if not self._warned_stale:
+                self._warned_stale = True
+                log.warning(
+                    "shm ring %s: stale cross-process head cursor read "
+                    "(used=%d cap=%d); clamping to full and retrying "
+                    "[warned once per ring]",
+                    self.shm.name, used, self.capacity)
             return 0                    # stale/torn cursor read: treat full
         return self.capacity - used
 
@@ -988,6 +1026,12 @@ class ShmRing:
         head, tail = self._head(), self._tail()
         n = tail - head
         if n <= 0 or n > self.capacity:
+            if (n < 0 or n > self.capacity) and not self._warned_stale:
+                self._warned_stale = True
+                log.warning(
+                    "shm ring %s: stale cross-process tail cursor read "
+                    "(n=%d cap=%d); treating as empty and retrying "
+                    "[warned once per ring]", self.shm.name, n, self.capacity)
             return b""
         pos = head % self.capacity
         first = min(n, self.capacity - pos)
@@ -1133,8 +1177,11 @@ def ring_reader(ring: ShmRing, bell_r: int,
 
 def start_reader(name: str, read_chunk: Callable[[], Optional[bytes]],
                  inbox: queue.Queue,
-                 on_error: Callable[[BaseException], None]) -> threading.Thread:
-    t = threading.Thread(target=_reader_loop, args=(read_chunk, inbox, on_error),
+                 on_error: Callable[[BaseException], None],
+                 trace: Optional["trace_mod.TraceHub"] = None,
+                 ) -> threading.Thread:
+    t = threading.Thread(target=_reader_loop,
+                         args=(read_chunk, inbox, on_error, trace),
                          name=name, daemon=True)
     t.start()
     return t

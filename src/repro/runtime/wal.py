@@ -54,6 +54,7 @@ counter.
 """
 from __future__ import annotations
 
+import logging
 import os
 import re
 import struct
@@ -67,6 +68,8 @@ from repro.runtime.transport import (EOF_LEN, RAW_MAGIC, RowCodec,
                                      decode_payload, encode_frame, eof_frame)
 
 _U32 = struct.Struct("<I")
+
+log = logging.getLogger("repro.runtime.wal")
 
 FSYNC_POLICIES: Tuple[str, ...] = ("none", "boundary")
 
@@ -325,6 +328,11 @@ def read_segment(path: str, codec: RowCodec) -> Tuple[list, bool]:
                                  f"record {type(msg).__name__}")
         if run:
             out.append(("parts", run))
+    if not sealed and off < n:
+        log.warning("wal segment %s: torn tail — %d trailing byte(s) of an "
+                    "incomplete record dropped, recovered cleanly to the "
+                    "last complete record (%d kept)",
+                    path, n - off, len(out))
     return out, sealed
 
 

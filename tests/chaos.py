@@ -210,6 +210,15 @@ def random_membership_script(seed: int, n_clocks: int, n_shards: int,
 # runtime chaos leg
 # ---------------------------------------------------------------------------
 
+# the most recent chaos runtime: conftest's failure hook dumps its trace
+# export + metrics snapshot into test-artifacts/<test>/ for post-mortems
+LAST_RT: Optional[PSRuntime] = None
+
+# chaos runs always record a lightly sampled trace (update lifelines at 5%,
+# all non-sampled layer spans at full rate): cheap enough to leave on, and
+# the artifact a red chaos assertion is explained with
+CHAOS_TRACE = {"sample": 0.05}
+
 
 class ReplicaWedger:
     """Seeded replica fault injector: wedges a random replica's publish
@@ -332,13 +341,15 @@ def chaos_run(seed: int, pol, n_clocks: int, transport: str = "queue",
     bounds and counter audit must keep holding.  The started instance is
     attached as ``rt.autoscaler``.  ``fn`` overrides the update workload
     (default :func:`det_fn`; pass :func:`zipf_fn` for skewed bursts)."""
+    global LAST_RT
     plan = None if autoscale else random_membership_script(
         seed, n_clocks, n_shards=2, max_shards=max_shards, n_events=n_events)
     rt = PSRuntime(RuntimeConfig(4, pol, x0(), n_shards=2, threads_per_process=2,
                    seed=seed, max_shards=max_shards, transport=transport,
                    membership_plan=plan, wal_dir=wal_dir, wal_fsync=wal_fsync,
                    snapshot_every=snapshot_every, snapshot_dir=snapshot_dir,
-                   snapshot_keep_last=snapshot_keep_last))
+                   snapshot_keep_last=snapshot_keep_last, trace=CHAOS_TRACE))
+    LAST_RT = rt
     reader = wedger = gw = asc = None
     rt.start(det_fn(seed) if fn is None else fn, n_clocks, timeout=timeout)
     try:

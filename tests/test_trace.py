@@ -1,0 +1,278 @@
+"""End-to-end tracing tier (repro.runtime.trace).
+
+Four claims under test:
+
+* **Exact reconciliation** — with ``sample=1.0`` and no ring drops, the
+  trace is not an approximation: after quiesce, ``send_part`` events equal
+  the authoritative ``rt._parts_sent`` total and ``apply_part`` events
+  equal the per-shard ``applied_parts`` audit — over queue, shm and tcp
+  alike (proc-mode rings ship back over the existing ProcDone pipe).
+
+* **Perfetto export is well-formed** — ``rt.dump_trace`` writes valid
+  Chrome trace-event JSON whose update lifelines span client -> shard
+  (``send_part`` flow-start / ``apply_part`` flow-end on the same id) and
+  shard -> replica (``publish_part`` / ``ingest_part``).
+
+* **The audit APIs name the culprit** — a deliberately wedged replica
+  forces an escalation and ``rt.explain_read`` names the exact lagging
+  ``(shard, proc)`` vector-clock cell the gateway measured.
+
+* **Timestamp discipline** — the runtime's hot paths use monotonic clocks
+  only (no ``time.time()`` anywhere in the runtime package), so events
+  from forked children land on the parent's timeline.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import policies
+from repro.runtime import (PSRuntime, ReadGateway, RuntimeConfig, TraceConfig,
+                           explain_read)
+from repro.runtime import trace as trace_mod
+
+
+def _x0():
+    return {"a": np.zeros((8, 4)), "b": np.ones(6)}
+
+
+def _fn(seed):
+    def fn(w, clock, view, rng):
+        r = np.random.default_rng((seed, w, clock))
+        return {"a": r.integers(-2, 3, size=(8, 4)).astype(float),
+                "b": r.integers(-2, 3, size=6).astype(float)}
+    return fn
+
+
+def _run(transport, n_workers=2, n_clocks=6, **kw):
+    rt = PSRuntime(RuntimeConfig(n_workers, policies.ssp(2), _x0(),
+                                 n_shards=2, transport=transport, **kw))
+    rt.start(_fn(7), n_clocks, timeout=60.0)
+    stats = rt.wait()
+    return rt, stats
+
+
+# ---------------------------------------------------------------------------
+# config normalization
+# ---------------------------------------------------------------------------
+
+
+def test_trace_config_normalization():
+    norm = trace_mod.normalize_trace
+    assert norm(None) is None
+    assert norm(False) is None
+    assert norm(True) == TraceConfig()
+    assert norm(0.25).sample == 0.25
+    assert norm({"sample": 0.5, "capacity": 1024}) == TraceConfig(0.5, 1024)
+    cfg = TraceConfig(sample=0.1)
+    assert norm(cfg) is cfg
+    with pytest.raises(ValueError):
+        norm(0.0)                          # sample out of (0, 1]
+    with pytest.raises(ValueError):
+        norm(1.5)
+    with pytest.raises(ValueError):
+        norm({"sample": 1.0, "capacity": 16})   # ring too small
+    with pytest.raises(ValueError):
+        norm({"bogus": 1})
+    with pytest.raises(ValueError):
+        norm("yes")
+    # RuntimeConfig validates eagerly at construction
+    with pytest.raises(ValueError):
+        RuntimeConfig(2, policies.ssp(1), _x0(), trace=2.0)
+
+
+def test_trace_off_by_default():
+    rt, _ = _run("queue")
+    assert rt._trace is None and not rt.trace_on
+    with pytest.raises(RuntimeError, match="tracing is off"):
+        rt.dump_trace("/dev/null")
+    # explain_read stays usable without tracing: it is a pure function of
+    # the ReadResult stamps
+    with ReadGateway(rt, n_replicas=1) as gw:
+        info = rt.explain_read(gw.read("a", slo=None))
+    assert info["source"].startswith(("replica", "master", "cache"))
+
+
+# ---------------------------------------------------------------------------
+# exact reconciliation with the PR-7 counter audit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("transport", ["queue", "shm", "tcp"])
+def test_trace_reconciles_exactly_after_quiesce(transport):
+    rt, stats = _run(transport, trace=True)
+    hub = rt._trace
+    assert hub.dropped() == 0
+    counts = hub.counts()
+    sent = int(rt._parts_sent.sum())
+    applied = sum(int(s.applied_parts.sum()) for s in rt.shards)
+    # zero lost / zero duplicated update parts, now visible per-event: at
+    # sample=1.0 every part's send and its post-dedup apply were recorded
+    assert counts.get(trace_mod.EV_SEND, 0) == sent
+    assert counts.get(trace_mod.EV_APPLY_PART, 0) == applied == sent
+    # every layer recorded: client flush + clock, shard batch/apply
+    for kind in (trace_mod.EV_FLUSH, trace_mod.EV_CLOCK,
+                 trace_mod.EV_SHARD_BATCH, trace_mod.EV_APPLY):
+        assert counts.get(kind, 0) > 0, trace_mod._NAMES[kind]
+    if transport in ("shm", "tcp"):
+        # wire events recorded on both the write and the decode side
+        assert counts.get(trace_mod.EV_WIRE_WRITE, 0) > 0
+        assert counts.get(trace_mod.EV_WIRE_DECODE, 0) > 0
+        # forked/threaded client rings were adopted into the parent hub
+        procs = {r["proc"] for r in hub.all_rings()}
+        assert any(p.startswith("client-") for p in procs), procs
+    # the metrics tree reports the tracing tier
+    m = rt.metrics()
+    assert m.trace_enabled and m.trace_dropped == 0
+
+
+def test_trace_sampling_subsets_lifelines():
+    rt, _ = _run("queue", trace={"sample": 0.25})
+    counts = rt._trace.counts()
+    sent_all = int(rt._parts_sent.sum())
+    sent_traced = counts.get(trace_mod.EV_SEND, 0)
+    # sampled lifelines are a strict subset, but send and apply agree
+    # exactly on WHICH uids were sampled (deterministic uid hash)
+    assert sent_traced < sent_all
+    assert counts.get(trace_mod.EV_APPLY_PART, 0) == sent_traced
+    # unsampled spans (flush, apply, batch) still record at full rate
+    assert counts.get(trace_mod.EV_APPLY, 0) > 0
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+
+
+def test_dump_trace_is_valid_chrome_json_with_lifelines(tmp_path):
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(2), _x0(), n_shards=2,
+                                 transport="queue", trace=True))
+    # subscribe BEFORE the run so deltas stream to the replica and the
+    # shard->replica lifelines exist in the export
+    with ReadGateway(rt, n_replicas=1) as gw:
+        rt.start(_fn(7), 6, timeout=60.0)
+        rt.wait()
+        gw.read("a", slo=0)
+        path = tmp_path / "trace.json"
+        info = rt.dump_trace(str(path))
+    assert info["path"] == str(path) and info["dropped"] == 0
+    doc = json.loads(path.read_text())     # valid JSON, Perfetto-loadable
+    evs = doc["traceEvents"]
+    assert isinstance(evs, list) and evs
+    slices = [e for e in evs if e["ph"] == "X"]
+    assert all(e["dur"] >= 1.0 and e["ts"] >= 0.0 for e in slices)
+    # one process_name per proc label, one thread_name per ring
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in evs)
+    # update lifelines: every flow start ("s") binds a flow end ("f") on
+    # the same id — client->shard (send/apply) and shard->replica
+    # (publish/ingest) both present
+    starts = {e["id"] for e in evs if e["ph"] == "s"}
+    ends = {e["id"] for e in evs if e["ph"] == "f"}
+    bound = starts & ends
+    assert bound, "no bound lifelines in the export"
+    update_ids = {i for i in bound if not (i >> 62)}
+    publish_ids = {i for i in bound if i >> 62}
+    assert update_ids, "no client->shard lifeline"
+    assert publish_ids, "no shard->replica lifeline"
+    assert all(e.get("bp") == "e" for e in evs if e["ph"] == "f")
+
+
+# ---------------------------------------------------------------------------
+# consistency audit trails
+# ---------------------------------------------------------------------------
+
+
+def test_explain_read_names_the_lagging_pair(tmp_path):
+    """A deliberately wedged replica forces an escalation; explain_read
+    names the exact (shard slot, process) vector-clock cell that trailed
+    the master frontier furthest."""
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(2), _x0(), n_shards=2,
+                                 transport="queue", trace=True))
+    gw = ReadGateway(rt, n_replicas=1, transport="shm")
+    rset = gw.replicas
+    rset.wedge(0)                          # stop draining before any delta
+    rt.start(_fn(3), 6, timeout=60.0)
+    rt.wait()
+    try:
+        res = gw.read("a", slo=0, timeout=0.4)
+        assert res.escalated and res.source == "master"
+        # the run quiesced and the replica is still wedged: both vcs are
+        # frozen, so the gateway's measurement is exactly reproducible
+        rep = rset.replicas[0]
+        gap = rset.master_vc() - rep.vc
+        s, p = np.unravel_index(int(gap.argmax()), gap.shape)
+        expect = (int(s), int(p))
+        info = rt.explain_read(res)
+        assert info["escalated"] and info["lagging"] == expect
+        assert info["vc_gap"] == max(int(gap.max()), 0) > 0
+        assert f"shard {expect[0]}" in info["summary"]
+        assert f"process {expect[1]}" in info["summary"]
+        # the escalation and the park both left trace events
+        counts = rt._trace.counts()
+        assert counts.get(trace_mod.EV_ESCALATE, 0) >= 1
+        assert counts.get(trace_mod.EV_READ, 0) >= 1
+        # module-level helper agrees with the method
+        assert explain_read(res) == info
+    finally:
+        rset.wedge(0, wedged=False)
+        gw.close()
+
+
+def test_explain_block_attributes_stalls():
+    rt, stats = _run("queue", trace=True)
+    info = rt.explain_block()
+    assert info["n_blocks"] == len(list(
+        rt._trace.events((trace_mod.EV_BLOCK_CLOCK,
+                          trace_mod.EV_BLOCK_VALUE))))
+    # recorded block time is bounded by the stats' own accounting (spans
+    # only exist when tracing saw the wait happen)
+    assert info["clock_blocked_s"] <= stats.block_time_clock + 0.5
+    if info["by_straggler"]:
+        assert info["straggler"] in range(rt.n_proc)
+        assert "straggler" in info["summary"]
+    # filtered views only shrink
+    one = rt.explain_block(process=0)
+    assert one["n_blocks"] <= info["n_blocks"]
+
+
+def test_staleness_timeline_reconstructs_replica_lag():
+    rt = PSRuntime(RuntimeConfig(2, policies.ssp(2), _x0(), n_shards=2,
+                                 transport="queue", trace=True))
+    with ReadGateway(rt, n_replicas=1) as gw:
+        rt.start(_fn(7), 6, timeout=60.0)
+        rt.wait()
+        gw.read("a", slo=0)
+        tl = rt.staleness_timeline(0)
+    assert tl["shard"] == 0
+    assert tl["bound"] == rt.policy.staleness  # ssp: clock-bounded
+    assert tl["points"], "no replica_vc adoptions recorded for shard 0"
+    for t_s, rid, lag in tl["points"]:
+        assert t_s >= 0.0 and rid >= 0 and lag >= 0
+    assert tl["max_staleness"] == max(p[2] for p in tl["points"])
+    # points are time-ordered (sorted on the shared monotonic timeline)
+    ts = [p[0] for p in tl["points"]]
+    assert ts == sorted(ts)
+
+
+# ---------------------------------------------------------------------------
+# timestamp discipline
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_package_uses_monotonic_clocks_only():
+    """Events from forked children must land on the parent's timeline:
+    CLOCK_MONOTONIC is system-wide on Linux, wall clocks are not — so no
+    runtime module may call time.time()."""
+    import repro.runtime as pkg
+    root = os.path.dirname(pkg.__file__)
+    offenders = []
+    for dirpath, _dirs, files in os.walk(root):
+        for name in files:
+            if not name.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, name)
+            with open(path) as f:
+                if "time.time(" in f.read():
+                    offenders.append(os.path.relpath(path, root))
+    assert not offenders, f"wall-clock use on runtime paths: {offenders}"
