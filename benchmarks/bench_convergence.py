@@ -1,0 +1,153 @@
+"""Benchmark: convergence vs staleness, per consistency policy.
+
+Two statistical workloads — SGD matrix factorization (:mod:`repro.apps.mf`)
+and logistic regression (:mod:`repro.apps.logreg`) — run on the executable
+spec with a laggy network and a straggler, so staleness is real and
+*measured* (``stats.max_observed_staleness``), not just configured.  Each
+policy in {bsp, ssp(s), essp(s), vap, elastic} contributes one loss curve
+per workload; the staleness sweep over ``s`` is the paper's
+convergence-vs-staleness trade-off, and the ESSP rows demonstrate the
+eager-push claim (arXiv:1410.8043): at an equal configured bound the
+staleness workers actually observe can only shrink.
+
+Gates:
+
+* zero recorded bound violations in every leg;
+* every curve converges (final loss below its start);
+* for every workload and every swept ``s``, ESSP's measured read staleness
+  <= SSP's at the same configured bound.
+
+    PYTHONPATH=src python benchmarks/bench_convergence.py \
+        [--smoke] [--json BENCH_convergence.json]
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from repro.apps import logreg, mf
+from repro.core import NetworkModel, policies
+
+try:                                    # package import (benchmarks.run)
+    from benchmarks import common as _common
+except ImportError:                     # direct script run from benchmarks/
+    import common as _common
+
+N_WORKERS = 4
+SEED = 7
+VTHR = 0.1       # VAP element-wise bound, ~a few hot deltas deep
+NORM_B = 1.0     # elastic whole-accumulator L2 bound
+
+
+def _policy_matrix(smoke: bool):
+    svals = [2] if smoke else [1, 2, 4]
+    out = [("bsp", policies.bsp(), {"kind": "bsp"})]
+    for s in svals:
+        out.append((f"ssp{s}", policies.ssp(s),
+                    {"kind": "ssp", "staleness": s}))
+        out.append((f"essp{s}", policies.essp(s),
+                    {"kind": "essp", "staleness": s}))
+    out.append(("vap", policies.vap(VTHR),
+                {"kind": "vap", "value_bound": VTHR}))
+    out.append(("elastic", policies.elastic(NORM_B),
+                {"kind": "elastic", "norm_bound": NORM_B}))
+    return out
+
+
+def _net():
+    # delivery latency comparable to a compute period + a 3x straggler:
+    # SSP reads genuinely run stale, so the sweep has something to measure
+    return dict(network=NetworkModel(base_delay=0.6, jitter=0.3, seed=SEED),
+                straggler={0: 3.0})
+
+
+def _mf_leg(pol, n_clocks: int):
+    ratings = mf.synthetic_ratings(seed=SEED)
+    return mf.run_mf(ratings, 60, 40, 4, pol, N_WORKERS, n_clocks,
+                     seed=SEED, collect_stats=True, **_net())
+
+
+def _logreg_leg(pol, n_clocks: int):
+    X, y = logreg.synthetic_classification(seed=SEED)
+    return logreg.run_logreg(X, y, pol, N_WORKERS, n_clocks, seed=SEED,
+                             collect_stats=True, **_net())
+
+
+_WORKLOADS = (("mf", _mf_leg), ("logreg", _logreg_leg))
+
+
+def run(smoke: bool = False) -> List[Dict]:
+    n_clocks = 15 if smoke else 40
+    rows: List[Dict] = []
+    for wname, leg in _WORKLOADS:
+        for pname, pol, desc in _policy_matrix(smoke):
+            curve, stats = leg(pol, n_clocks)
+            rows.append({
+                "name": f"convergence/{wname}/{pname}",
+                "workload": wname,
+                "n_clocks": n_clocks,
+                **desc,
+                "first_loss": curve[0],
+                "final_loss": curve[-1],
+                "curve": [round(float(v), 6) for v in curve],
+                "measured_staleness": int(stats.max_observed_staleness),
+                "n_updates": stats.n_updates,
+                "violations": len(stats.violations),
+            })
+    return rows
+
+
+def gates(rows: List[Dict]) -> List[str]:
+    failed = []
+    by = {r["name"]: r for r in rows}
+    for r in rows:
+        if r["violations"]:
+            failed.append(f"{r['name']}: {r['violations']} bound violations")
+        if not r["final_loss"] < r["first_loss"]:
+            failed.append(f"{r['name']}: did not converge "
+                          f"({r['first_loss']:.4f} -> {r['final_loss']:.4f})")
+    for wname, _ in _WORKLOADS:
+        for r in rows:
+            if r["workload"] != wname or r["kind"] != "essp":
+                continue
+            peer = by[f"convergence/{wname}/ssp{r['staleness']}"]
+            print(f"# convergence/{wname} s={r['staleness']}: measured "
+                  f"staleness essp {r['measured_staleness']} vs ssp "
+                  f"{peer['measured_staleness']}, final loss "
+                  f"{r['final_loss']:.4f} vs {peer['final_loss']:.4f}")
+            if r["measured_staleness"] > peer["measured_staleness"]:
+                failed.append(
+                    f"{r['name']}: measured staleness "
+                    f"{r['measured_staleness']} > ssp's "
+                    f"{peer['measured_staleness']} at equal bound")
+    return failed
+
+
+def write_json(rows: List[Dict], path: str) -> None:
+    _common.write_bench_json(path, "bench_convergence", rows)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config (shorter runs, same gates)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write consolidated BENCH_convergence.json here")
+    args = ap.parse_args()
+
+    rows = run(smoke=args.smoke)
+    for r in rows:
+        print(f"{r['name']}: loss {r['first_loss']:.4f} -> "
+              f"{r['final_loss']:.4f}, staleness {r['measured_staleness']}")
+    failed = gates(rows)
+    if args.json:
+        write_json(rows, args.json)
+        print(f"# wrote {args.json}")
+    for msg in failed:
+        print(f"# GATE FAILED: {msg}")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -92,6 +92,20 @@ def main() -> None:
     bench_wal.write_json(wal_rows, wal_out)
     print(f"# wrote {wal_out}")
 
+    print("# --- convergence vs staleness per policy (SGD MF + logreg) ---")
+    from benchmarks import bench_convergence
+    cv_rows = bench_convergence.run()
+    for r in cv_rows:
+        all_rows.append(dict(r))
+        slim = {k: v for k, v in r.items() if k != "curve"}
+        slim.setdefault("us_per_call", 0.0)
+        print(_csv_line(slim))
+    bench_convergence.gates(cv_rows)
+    cv_out = os.path.join(os.path.dirname(__file__), "..", "results",
+                          "BENCH_convergence.json")
+    bench_convergence.write_json(cv_rows, cv_out)
+    print(f"# wrote {cv_out}")
+
     print("# --- kernel reference-path microbenchmarks ---")
     from benchmarks import bench_kernels
     for r in bench_kernels.run():

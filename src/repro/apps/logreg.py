@@ -1,0 +1,86 @@
+"""Distributed logistic regression on the asynchronous parameter server.
+
+One PS key — the weight vector ``w`` — and a row-sharded synthetic binary
+classification problem: each clock a worker computes the L2-regularized
+logistic-loss gradient of its shard against its (possibly stale /
+bound-gated) view and emits ``-lr * grad``.  The convex objective makes
+the staleness penalty clean to read off the loss curve, which is why this
+is the second workload of :mod:`benchmarks.bench_convergence`.
+
+Runs on the executable spec (``backend="sim"``) and on the live threaded
+runtime (``backend="runtime"``), exactly like :mod:`repro.apps.mf`.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policies import Policy
+from repro.core.server import AsyncPS, NetworkModel
+
+
+def synthetic_classification(n: int = 400, d: int = 20, noise: float = 0.5,
+                             seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Linearly separable-ish labels from a planted weight vector."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(0.0, 1.0, (n, d))
+    wstar = rng.normal(0.0, 1.0, d)
+    y = np.where(X @ wstar + rng.normal(0.0, noise, n) > 0.0, 1.0, -1.0)
+    return X, y
+
+
+def log_loss(X: np.ndarray, y: np.ndarray, w: np.ndarray,
+             reg: float = 0.0) -> float:
+    m = y * (X @ w)
+    return float(np.mean(np.logaddexp(0.0, -m)) + 0.5 * reg * w @ w)
+
+
+def _grad_shard(X: np.ndarray, y: np.ndarray, w: np.ndarray,
+                reg: float) -> np.ndarray:
+    m = y * (X @ w)
+    s = -y / (1.0 + np.exp(m))                       # d loss / d margin
+    return X.T @ s / max(len(y), 1) + reg * w
+
+
+def run_logreg(X: np.ndarray, y: np.ndarray, policy: Policy,
+               n_workers: int, n_clocks: int, lr: float = 0.5,
+               reg: float = 1e-3, seed: int = 0,
+               network: Optional[NetworkModel] = None, straggler=None,
+               collect_stats: bool = False, backend: str = "sim",
+               threads_per_process: int = 1, n_shards: int = 2,
+               timeout: float = 300.0):
+    """Returns the per-clock full-data log-loss list (and stats if asked).
+
+    Worker 0 records the loss of its view at the top of every period, the
+    same recording convention as :func:`repro.apps.mf.run_mf`.
+    """
+    d = X.shape[1]
+    Xs = [X[w::n_workers] for w in range(n_workers)]
+    ys = [y[w::n_workers] for w in range(n_workers)]
+    losses: List[float] = []
+
+    def update_fn(w: int, clock: int, view, wrng: np.random.Generator):
+        wv = view.get("w")
+        if w == 0:
+            losses.append(log_loss(X, y, wv, reg))
+        return {"w": -lr * _grad_shard(Xs[w], ys[w], wv, reg)}
+
+    x0 = {"w": np.zeros(d)}
+    if backend == "sim":
+        ps = AsyncPS(n_workers, policy, x0,
+                     network=network or NetworkModel(seed=seed),
+                     straggler=straggler, seed=seed)
+        stats = ps.run(update_fn, n_clocks)
+    elif backend == "runtime":
+        from repro.runtime import PSRuntime, RuntimeConfig
+        rt = PSRuntime(RuntimeConfig(n_workers, policy, x0,
+                       n_shards=n_shards,
+                       threads_per_process=threads_per_process, seed=seed))
+        stats = rt.run(update_fn, n_clocks, timeout=timeout)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    if collect_stats:
+        return losses, stats
+    return losses

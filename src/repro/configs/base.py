@@ -229,9 +229,9 @@ class InputShape:
 class ConsistencySpec:
     """User-facing consistency selection; mirrors the paper's policies."""
 
-    model: str = "bsp"                # bsp|ssp|cap|vap|cvap
-    staleness: int = 0                # s  (ssp/cap/cvap)
-    value_bound: float = 0.0          # v_thr (vap/cvap)
+    model: str = "bsp"                # bsp|ssp|cap|essp|vap|cvap|elastic
+    staleness: int = 0                # s  (ssp/cap/essp/cvap)
+    value_bound: float = 0.0          # v_thr (vap/cvap) / norm B (elastic)
     strong: bool = False              # strong VAP variant (simulator only)
 
 

@@ -8,11 +8,12 @@ Two layers (DESIGN.md §3):
 """
 from repro.core import controller, policies, theory
 from repro.core.client import ThreadCache, app_update_fn, run_app
-from repro.core.policies import Policy, bsp, cap, cvap, from_spec, ssp, vap
+from repro.core.policies import (Policy, bsp, cap, cvap, elastic, essp,
+                                 from_spec, ssp, vap)
 from repro.core.server import AsyncPS, NetworkModel, RunStats, Update, ViewHandle
-from repro.core.sync import (SyncState, apply_and_sync, force_sync,
-                             init_sync_state, sync_trigger, tree_max_abs,
-                             vap_invariant_ok)
+from repro.core.sync import (SyncState, apply_and_sync, elastic_invariant_ok,
+                             force_sync, init_sync_state, sync_trigger,
+                             tree_l2_norm, tree_max_abs, vap_invariant_ok)
 from repro.core.tables import Row, SparseRow, Table, TableGroup
 from repro.core.vector_clock import VectorClock
 
@@ -20,7 +21,8 @@ __all__ = [
     "AsyncPS", "NetworkModel", "Policy", "Row", "RunStats", "SparseRow",
     "SyncState", "Table", "TableGroup", "ThreadCache", "Update", "VectorClock",
     "ViewHandle", "app_update_fn", "apply_and_sync", "bsp", "cap",
-    "controller", "cvap", "force_sync", "from_spec", "init_sync_state",
-    "policies", "run_app", "ssp", "sync_trigger", "theory", "tree_max_abs",
-    "vap", "vap_invariant_ok",
+    "controller", "cvap", "elastic", "elastic_invariant_ok", "essp",
+    "force_sync", "from_spec", "init_sync_state",
+    "policies", "run_app", "ssp", "sync_trigger", "theory", "tree_l2_norm",
+    "tree_max_abs", "vap", "vap_invariant_ok",
 ]

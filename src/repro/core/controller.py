@@ -89,3 +89,25 @@ def strong_delivery_gate(policy: Policy, halfsync_mag: np.ndarray,
 def vap_unsynced_bound(policy: Policy, max_update_mag: float) -> float:
     """The guaranteed bound on any worker's unsynchronized accumulator."""
     return max(max_update_mag, policy.value_bound)
+
+
+def elastic_gate(policy: Policy, acc_norm: float, new_norm: float) -> bool:
+    """May this update be applied under the elastic norm bound?
+
+    ``acc_norm`` is the L2 norm of the worker's *whole* unsynchronized
+    accumulator (all keys stacked) before the update, ``new_norm`` the norm
+    it would have after.  Blocked when the new norm would exceed B AND the
+    accumulator is non-empty — a lone oversized update is admitted, mirroring
+    VAP's Fig. 1 semantics and yielding the ``max(‖u‖₂, B)`` bound.
+    """
+    if not policy.norm_bounded:
+        return True
+    if new_norm <= policy.value_bound + 1e-9:
+        return True
+    # the 1e-12 tolerance absorbs float residue left by add/subtract cycles
+    return acc_norm <= 1e-12
+
+
+def elastic_unsynced_bound(policy: Policy, max_update_norm: float) -> float:
+    """The guaranteed bound on ‖any worker's unsynced sum‖₂ (elastic)."""
+    return max(max_update_norm, policy.value_bound)

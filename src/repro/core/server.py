@@ -19,6 +19,16 @@ Faithfully modelled paper semantics:
                        gated to max(u, v_thr), giving divergence ≤ 2·max(u,
                        v_thr) independent of P;
   * SSP              — updates leave only during the synchronization phase;
+  * ESSP             — eager variant of SSP (arXiv:1410.8043): the clock gate
+                       is SSP's, but propagation is eager.  In this collapsed
+                       single-heap model, eager *server* push coincides with
+                       eager *worker* push, so the essp spec semantics equal
+                       CAP's; the kinds differ in the runtime wire mechanism
+                       (the shard coalesces deliveries per destination and
+                       flushes one frame per peer at each clock boundary);
+  * elastic          — elastic consistency (arXiv:2001.05918): the L2 norm of
+                       a worker's whole unobserved-update sum stays within
+                       max(‖u‖₂, B) via blocking;
   * batching/priority— outgoing updates within a clock may be sent
                        largest-magnitude first (paper §4.2).
 
@@ -35,6 +45,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
+import math
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -114,6 +125,9 @@ class RunStats:
     max_observed_staleness: int = 0
     max_unsynced_mag: float = 0.0
     max_update_mag: float = 0.0
+    # elastic-consistency accounting: L2 norms of whole unsynced sums / deltas
+    max_unsynced_norm: float = 0.0
+    max_update_norm: float = 0.0
     max_divergence: float = 0.0
     max_halfsync_mag: float = 0.0
     divergence_trace: List[Tuple[float, float]] = field(default_factory=list)
@@ -216,6 +230,20 @@ class AsyncPS:
     def _push_event(self, t: float, kind: str, payload) -> None:
         heapq.heappush(self.events, (t, next(self._evt), kind, payload))
 
+    def _unsynced_norm(self, w: int) -> float:
+        """L2 norm of worker w's whole unsynchronized accumulator set."""
+        sq = sum(float(np.sum(v * v)) for v in self.unsynced[w].values())
+        return math.sqrt(max(sq, 0.0))
+
+    def _elastic_norms(self, w: int, key: Key,
+                       delta: np.ndarray) -> Tuple[float, float]:
+        """(‖unsynced‖₂ before, ‖unsynced‖₂ after applying delta to key)."""
+        sq = sum(float(np.sum(v * v)) for v in self.unsynced[w].values())
+        cur = self.unsynced[w][key]
+        new = cur + delta
+        new_sq = sq - float(np.sum(cur * cur)) + float(np.sum(new * new))
+        return math.sqrt(max(sq, 0.0)), math.sqrt(max(new_sq, 0.0))
+
     def _frontier(self, recv_proc: int) -> np.ndarray:
         """For each other process q: the highest period p such that every
         update from q stamped ≤ p has been delivered to recv_proc."""
@@ -297,6 +325,9 @@ class AsyncPS:
         while self._pending_idx[w] < len(self._pending[w]):
             key, delta = self._pending[w][self._pending_idx[w]]
             ok, _ = controller.value_gate(self.policy, self.unsynced[w][key], delta)
+            if ok and self.policy.norm_bounded:
+                acc_n, new_n = self._elastic_norms(w, key, delta)
+                ok = controller.elastic_gate(self.policy, acc_n, new_n)
             if not ok:
                 if self._state[w] != _VALUE_BLOCKED:
                     self._state[w] = _VALUE_BLOCKED
@@ -321,6 +352,8 @@ class AsyncPS:
         # read-my-writes: own process cache sees it immediately
         self.views[pr][key] = self.views[pr][key] + delta
         self.unsynced[w][key] = self.unsynced[w][key] + delta
+        dn = float(np.linalg.norm(delta)) if delta.size else 0.0
+        self.stats.max_update_norm = max(self.stats.max_update_norm, dn)
         if self.check:
             bound = controller.vap_unsynced_bound(self.policy, self.stats.max_update_mag)
             mx = float(np.max(np.abs(self.unsynced[w][key])))
@@ -328,6 +361,15 @@ class AsyncPS:
             if self.policy.value_bounded and mx > bound + 1e-12:
                 self.stats.violations.append(
                     f"VAP violation: worker {w} unsynced {mx} > {bound}")
+            un = self._unsynced_norm(w)
+            self.stats.max_unsynced_norm = max(self.stats.max_unsynced_norm, un)
+            if self.policy.norm_bounded:
+                nb = controller.elastic_unsynced_bound(
+                    self.policy, self.stats.max_update_norm)
+                if un > nb + 1e-9:
+                    self.stats.violations.append(
+                        f"elastic violation: worker {w} "
+                        f"unsynced norm {un} > {nb}")
         if self.n_proc == 1:
             u.delivery_started = True
             u.t_fully_delivered = self.t

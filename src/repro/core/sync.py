@@ -6,12 +6,17 @@ Updates apply locally first (read-my-writes); a jax.lax Consistency
 Controller decides per step whether the delta all-reduce runs:
 
     BSP   : every step.
-    SSP/CAP(s): every s-th step (staleness ≤ s by construction; in lockstep
-            SPMD the CAP/SSP distinction — push-early vs push-at-clock —
-            collapses, see DESIGN.md §3).
+    SSP/CAP/ESSP(s): every s-th step (staleness ≤ s by construction; in
+            lockstep SPMD the push-early vs push-at-clock distinction AND
+            ESSP's eager server push both collapse — every sync epoch is a
+            full exchange, so the server can't be "ahead" of it; see
+            DESIGN.md §3 and arXiv:1410.8043).
     VAP(v): when any replica's ‖δ‖∞ would exceed v_thr — one scalar pmax per
             step, the TPU analogue of the paper's per-worker blocking.
     CVAP  : clock OR value trigger.
+    elastic(B): when any replica's whole-tree ‖δ‖₂ would exceed B — the
+            elastic-consistency bound (arXiv:2001.05918) as a single scalar
+            pmax trigger, so post-step ‖δ‖₂ ≤ max(‖u‖₂, B) by construction.
 
 The sync itself is ``params ← params + (Σ_replicas δ) − δ`` — the associative
 and commutative update rule of §2, so FIFO/ordering concerns vanish and the
@@ -54,6 +59,7 @@ class SyncState:
     steps_since_sync: jnp.ndarray  # i32 scalar
     sync_count: jnp.ndarray        # i32 scalar — total sync epochs so far
     max_update_mag: jnp.ndarray    # f32 scalar — running max ‖u‖∞ (bound check)
+    max_update_l2: jnp.ndarray     # f32 scalar — running max ‖u‖₂ (elastic)
 
 
 def init_sync_state(params: PyTree, hierarchy: int = 0,
@@ -72,6 +78,7 @@ def init_sync_state(params: PyTree, hierarchy: int = 0,
         steps_since_sync=jnp.zeros((), jnp.int32),
         sync_count=jnp.zeros((), jnp.int32),
         max_update_mag=jnp.zeros((), jnp.float32),
+        max_update_l2=jnp.zeros((), jnp.float32),
     )
 
 
@@ -96,6 +103,16 @@ def tree_max_abs(t: PyTree) -> jnp.ndarray:
     """max over all leaves of ‖leaf‖∞ (f32 scalar)."""
     leaves = [jnp.max(jnp.abs(x)).astype(jnp.float32) for x in jax.tree.leaves(t)]
     return jnp.max(jnp.stack(leaves)) if leaves else jnp.zeros((), jnp.float32)
+
+
+def tree_l2_norm(t: PyTree) -> jnp.ndarray:
+    """L2 norm over the whole tree, ‖t‖₂ (f32 scalar) — the elastic bound's
+    aggregate, matching the simulator's whole-accumulator norm."""
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(t)]
+    if not leaves:
+        return jnp.zeros((), jnp.float32)
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
 def _psum_tree(t: PyTree, axes: Sequence[str], compress: Optional[str]) -> PyTree:
@@ -132,7 +149,14 @@ def sync_trigger(policy: Policy, sync_state: SyncState, new_delta: PyTree,
         local = tree_max_abs(new_delta)
         glob = lax.pmax(local, axes) if axes else local
         trig = trig | (glob > policy.value_bound)
-    if not policy.clock_bounded and not policy.value_bounded:
+    if policy.norm_bounded:
+        # elastic: one scalar — would any replica's whole-tree ‖δ‖₂ exceed
+        # the bound?  Same conservative mesh-wide uniformity as VAP.
+        local = tree_l2_norm(new_delta)
+        glob = lax.pmax(local, axes) if axes else local
+        trig = trig | (glob > policy.value_bound)
+    if not (policy.clock_bounded or policy.value_bounded
+            or policy.norm_bounded):
         trig = jnp.ones((), jnp.bool_)     # degenerate: stay synchronous
     return trig
 
@@ -167,6 +191,7 @@ def apply_and_sync(
     new_delta = jax.tree.map(lambda d, u: (d + u).astype(d.dtype),
                              sync_state.delta, update)
     umag = jnp.maximum(sync_state.max_update_mag, tree_max_abs(update))
+    ul2 = jnp.maximum(sync_state.max_update_l2, tree_l2_norm(update))
     trig = sync_trigger(policy, sync_state, new_delta, dp_axes,
                         trigger_axes=trigger_axes)
 
@@ -182,6 +207,7 @@ def apply_and_sync(
             steps_since_sync=jnp.where(trig, 0, sync_state.steps_since_sync + 1).astype(jnp.int32),
             sync_count=(sync_state.sync_count + trig.astype(jnp.int32)),
             max_update_mag=umag,
+            max_update_l2=ul2,
         )
         return params, new_state, trig
 
@@ -235,6 +261,7 @@ def apply_and_sync(
         steps_since_sync=jnp.where(trig, 0, sync_state.steps_since_sync + 1).astype(jnp.int32),
         sync_count=sync_state.sync_count + trig.astype(jnp.int32),
         max_update_mag=umag,
+        max_update_l2=ul2,
     )
     return params, new_state, trig
 
@@ -261,3 +288,11 @@ def vap_invariant_ok(policy: Policy, sync_state: SyncState) -> jnp.ndarray:
         return jnp.ones((), jnp.bool_)
     bound = jnp.maximum(sync_state.max_update_mag, policy.value_bound)
     return tree_max_abs(sync_state.delta) <= bound + 1e-6
+
+
+def elastic_invariant_ok(policy: Policy, sync_state: SyncState) -> jnp.ndarray:
+    """‖δ‖₂ ≤ max(‖u‖₂_max, B) — checked by tests after every step."""
+    if not policy.norm_bounded:
+        return jnp.ones((), jnp.bool_)
+    bound = jnp.maximum(sync_state.max_update_l2, policy.value_bound)
+    return tree_l2_norm(sync_state.delta) <= bound + 1e-6

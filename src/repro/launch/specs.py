@@ -72,7 +72,7 @@ def train_state_pspecs(cfg: ModelConfig, tcfg: TrainConfig, tp: int) -> TrainSta
                        residual=mirror(abs_local.sync.residual),
                        pod_pending=mirror(abs_local.sync.pod_pending),
                        steps_since_sync=P(), sync_count=P(),
-                       max_update_mag=P()),
+                       max_update_mag=P(), max_update_l2=P()),
         step=P(),
     )
     return jax.tree.map(lambda s: P(DP, *s), spec,

@@ -14,9 +14,13 @@ actual concurrency, in the style of Petuum-PS:
     receivers assert in check mode;
   * the **Consistency Controller** (:mod:`repro.core.controller`, shared with
     the simulator) gates progress: the clock bound blocks a worker whose
-    period would outrun the delivery frontier (BSP/SSP/CAP/CVAP), and the
+    period would outrun the delivery frontier (BSP/SSP/CAP/ESSP/CVAP), the
     value bound blocks an Inc that would push the element-wise unsynchronized
-    accumulator past ``max(u, v_thr)`` (VAP/CVAP);
+    accumulator past ``max(u, v_thr)`` (VAP/CVAP), and the elastic bound
+    blocks an Inc that would push the L2 norm of the worker's *whole*
+    unsynchronized sum past ``max(‖u‖₂, B)`` (elastic, arXiv:2001.05918) —
+    elastic accounting rides the same unsynced accumulators and
+    FullyDelivered ack cycle as VAP;
   * within a period, updates are applied and sent **largest-magnitude first**
     (paper §4.2); BSP/SSP hold them in a per-worker outbox until Clock().
 
@@ -65,6 +69,7 @@ trajectories against the simulator and the SPMD sync layer.
 from __future__ import annotations
 
 import itertools
+import math
 import multiprocessing
 import os
 import queue
@@ -102,6 +107,22 @@ def _ack_batches(pairs: List[Tuple[Channel, int]], pid: int
     channel (VAP ack batching: a flush's acks share a single frame)."""
     return [(chan, AckBatchMsg(np.asarray(uids, dtype=np.int64), pid))
             for chan, uids in group_by_channel(pairs)]
+
+
+def _unsynced_norm(unsynced: Dict[str, np.ndarray]) -> float:
+    """L2 norm of one worker's whole unsynchronized accumulator set."""
+    sq = sum(float(np.sum(v * v)) for v in unsynced.values())
+    return math.sqrt(max(sq, 0.0))
+
+
+def _elastic_norms(unsynced: Dict[str, np.ndarray], key: str,
+                   d2: np.ndarray) -> Tuple[float, float]:
+    """(‖unsynced‖₂ before, ‖unsynced‖₂ after applying d2 to key)."""
+    sq = sum(float(np.sum(v * v)) for v in unsynced.values())
+    cur = unsynced[key]
+    new = cur + d2
+    new_sq = sq - float(np.sum(cur * cur)) + float(np.sum(new * new))
+    return math.sqrt(max(sq, 0.0)), math.sqrt(max(new_sq, 0.0))
 
 
 class ClientProcess:
@@ -224,9 +245,9 @@ class ClientProcess:
                 self.staged.append(T.materialize_msg(msg))
             else:
                 self._apply_delivery(msg)
-                # acks only feed the VAP synchronized-update accounting;
-                # clock-only policies skip the whole ack cycle
-                if rt.policy.value_bounded:
+                # acks only feed the unsynced accounting (VAP value bound /
+                # elastic norm bound); clock-only policies skip the cycle
+                if rt.policy.tracks_sync:
                     self._acks.append(
                         (rt._chan_ps[self.pid][msg.shard], msg.uid))
         elif isinstance(msg, ClockMarker):
@@ -269,7 +290,7 @@ class ClientProcess:
         for msg in self.staged:
             if msg.ts < new_period:
                 self._apply_delivery(msg)
-                if self.rt.policy.value_bounded:
+                if self.rt.policy.tracks_sync:
                     acks.append((self.rt._chan_ps[self.pid][msg.shard],
                                  msg.uid))
             else:
@@ -359,7 +380,14 @@ class _WorkerFlowMixin:
                 outbox: List[Tuple[str, np.ndarray]] = []
                 for key, delta in items:
                     d2 = self._apply_update(w, clock, proc, key, delta)
-                    outbox.append((key, d2))
+                    if self.policy.norm_bounded:
+                        # elastic gates on the WHOLE accumulator: a delta
+                        # parked in a per-period outbox could never be
+                        # acknowledged and would wedge the gate on the next
+                        # key.  Send per Inc, like the simulator does.
+                        self._flush_outbox(w, clock, proc, [(key, d2)])
+                    else:
+                        outbox.append((key, d2))
                 if not self.policy.push_at_clock_only:
                     # async policies push without waiting for Clock(): one
                     # coalesced multi-row frame per shard channel per period
@@ -478,6 +506,11 @@ class _WorkerFlowMixin:
             while True:
                 ok, _ = controller.value_gate(
                     self.policy, proc.unsynced[w][key], d2)
+                if ok and self.policy.norm_bounded:
+                    # elastic: one bound on the whole accumulator's L2 norm,
+                    # re-evaluated as FullyDelivered echoes shrink it
+                    acc_n, new_n = _elastic_norms(proc.unsynced[w], key, d2)
+                    ok = controller.elastic_gate(self.policy, acc_n, new_n)
                 if ok:
                     break
                 blocked = True
@@ -505,6 +538,20 @@ class _WorkerFlowMixin:
                     if mx > bound + 1e-9:
                         self.stats.violations.append(
                             f"VAP violation: worker {w} unsynced {mx} > {bound}")
+                if self.policy.norm_bounded:
+                    dn = float(np.linalg.norm(d2)) if d2.size else 0.0
+                    self.stats.max_update_norm = max(
+                        self.stats.max_update_norm, dn)
+                    if self.check:
+                        un = _unsynced_norm(proc.unsynced[w])
+                        self.stats.max_unsynced_norm = max(
+                            self.stats.max_unsynced_norm, un)
+                        nb = controller.elastic_unsynced_bound(
+                            self.policy, self.stats.max_update_norm)
+                        if un > nb + 1e-9:
+                            self.stats.violations.append(
+                                f"elastic violation: worker {w} unsynced "
+                                f"norm {un} > {nb}")
         if blocked and self.trace_on:
             self._trace.span(trace_mod.EV_BLOCK_VALUE, int(t0 * 1e9),
                              proc.pid, w, clock)
@@ -1023,6 +1070,10 @@ class PSRuntime(_WorkerFlowMixin):
                 self.stats.max_unsynced_mag, st.max_unsynced_mag)
             self.stats.max_update_mag = max(
                 self.stats.max_update_mag, st.max_update_mag)
+            self.stats.max_unsynced_norm = max(
+                self.stats.max_unsynced_norm, st.max_unsynced_norm)
+            self.stats.max_update_norm = max(
+                self.stats.max_update_norm, st.max_update_norm)
             self.stats.violations.extend(st.violations)
             for k, v in fin["total"].items():
                 self._total[k] += v

@@ -69,10 +69,24 @@ the shard appends every applied update part to a per-slot write-ahead log
 — ``WalWriter.log_parts`` at the end of the apply's lock section (so the
 log marks stay consistent with the dense state), ``commit`` (group commit
 + vc stamp) from ``_flush_publish`` when the applied vector clock moved,
-and ``seal`` at the epoch cut of a retiring slot.  The same configuration
-arms :class:`UidDedup` on the apply path: at-least-once redelivery (a
-rejoined shard replaying its log, a retried wire) drops exact duplicates
-by uid under the per-process clock frontier instead of double-applying.
+and ``seal`` at the epoch cut of a retiring slot.
+
+Exactly-once apply: :class:`UidDedup` records every applied part and drops
+exact duplicates by uid under the per-process clock frontier instead of
+double-applying.  The drop filter is armed from the start on wal runs (log
+replay is at-least-once by design) and arms permanently at the first
+membership op on wal-off runs — cross-epoch resends around a kill+rejoin
+are the only wal-off source of duplicates.
+
+ESSP (eager server push, arXiv:1410.8043): under ``Policy("essp", ...)``
+the shard parks each applied part's fan-out :class:`DeliverMsg`\\ s in a
+per-destination hold instead of sending immediately, and releases the
+whole hold — one coalesced frame per peer channel, the same outbox framing
+the serving publish path uses — whenever it processes a client clock
+boundary (and before any INF/seeded marker or fin that vouches for the
+held periods).  Workers still gate on SSP's clock bound, but every
+boundary pushes all applied deltas to all peers, so observed staleness
+collapses well below s.
 """
 from __future__ import annotations
 
@@ -177,10 +191,20 @@ class ServerShard:
         self._held: List[object] = []      # next-epoch msgs, FIFO per proc
         # zero-lost/zero-duplicated audit: update parts applied, per origin
         self.applied_parts = np.zeros(rt.n_proc, dtype=np.int64)
-        # durability tier: per-slot write-ahead log + at-least-once dedup
-        # (both None unless the runtime was built with wal_dir)
+        # durability tier: per-slot write-ahead log (None unless the runtime
+        # was built with wal_dir)
         self.wal = rt._make_wal(sid)
-        self._dedup = UidDedup(rt.n_proc) if self.wal is not None else None
+        # at-least-once dedup: always constructed so the per-process clock
+        # frontier and uid tables are current from the first applied part,
+        # but the *drop* filter only arms where duplicates can exist — wal
+        # runs (log replay) from the start, wal-off runs permanently from
+        # the first membership op (cross-epoch resends around kill+rejoin
+        # can redeliver parts for the rest of the run)
+        self._dedup = UidDedup(rt.n_proc)
+        self._dedup_armed = self.wal is not None
+        # ESSP (eager server push): applied deltas held per destination and
+        # released one coalesced frame per peer at every clock boundary
+        self._essp_hold: Dict[int, List[DeliverMsg]] = {}
         # serving tier: applied per-process vector clock (guarded by .lock
         # for consistent reads from the gateway) + replica publish channels
         self.clock_vc = np.full(rt.n_proc, -1, dtype=np.int64)
@@ -313,10 +337,9 @@ class ServerShard:
             with self.lock:
                 self.clock_vc[msg.process] = max(
                     self.clock_vc[msg.process], msg.clock)
-            if self._dedup is not None:
-                # every part of the period is FIFO-before this message:
-                # the dedup frontier may advance and prune its uid table
-                self._dedup.advance(msg.process, msg.clock)
+            # every part of the period is FIFO-before this message:
+            # the dedup frontier may advance and prune its uid table
+            self._dedup.advance(msg.process, msg.clock)
             self._vc_dirty = True
             if msg.load is not None:
                 # metrics piggyback: the process's boundary counter snapshot
@@ -324,6 +347,9 @@ class ServerShard:
                 cur = self.proc_load.get(msg.process)
                 if cur is None or msg.clock >= cur[0]:
                     self.proc_load[msg.process] = (msg.clock, msg.load)
+            # ESSP: the clock boundary is the server's push point — release
+            # every held delivery (all destinations) FIFO-before the markers
+            self._flush_essp_hold()
             # echo the period-completed marker to every peer.  All of the
             # process's period-<=clock updates precede this message on the
             # same FIFO channel, so their DeliverMsgs are already enqueued
@@ -337,6 +363,12 @@ class ServerShard:
             self._pending_part = msg.part
             self._pending_acks = set()
             self._cut_done = False
+            # a membership op is in flight: cross-epoch at-least-once
+            # resends are now possible (and remain so — late retried wires
+            # can land after the install), so the duplicate filter arms
+            # permanently.  The uid tables have been recording since shard
+            # start, so pre-arming parts are covered too.
+            self._dedup_armed = True
         elif isinstance(msg, EpochAckMsg):
             self._pending_acks.add(msg.process)
             self._maybe_cut()
@@ -348,6 +380,9 @@ class ServerShard:
             self._on_unsubscribe(msg)
         elif isinstance(msg, ProcDoneMsg):
             self._done_procs.add(msg.process)
+            # ESSP: no further ClockMsg from this process will trigger a
+            # boundary flush — release any backlog so the fin can drain
+            self._flush_essp_hold()
         else:
             raise TypeError(f"shard {self.sid}: unexpected message {msg!r}")
 
@@ -375,7 +410,9 @@ class ServerShard:
             # retiring: everything this slot will ever deliver (bar strong-
             # VAP-queued updates, which are exempt from the clock frontier
             # exactly like in the simulator) is FIFO-before these markers,
-            # so clients may treat the slot as infinitely caught up
+            # so clients may treat the slot as infinitely caught up.  ESSP
+            # holds count as "ever deliver": release them first.
+            self._flush_essp_hold()
             for q in range(rt.n_proc):
                 for p in range(rt.n_proc):
                     if p != q:
@@ -411,6 +448,9 @@ class ServerShard:
         self._flush_updates(run)
         for _ in held:
             rt._msg_done()
+        # ESSP: deliveries the replay just parked must be FIFO-before the
+        # seeded markers that vouch for them
+        self._flush_essp_hold()
         if self.part.owns(self.sid):
             # seeded markers: deliveries for everything clock_vc covers are
             # FIFO-before this on each s->q channel (replayed just above or
@@ -454,12 +494,13 @@ class ServerShard:
         if not run:
             return
         rt = self.rt
-        if self._dedup is not None:
-            # at-least-once delivery: drop exact duplicates before they
-            # touch the dense state, the audit counters, or the WAL
-            # (dropped messages' frame pins release with the batch)
-            run = [m for m in run
-                   if self._dedup.fresh(m.uid, m.process, m.ts)]
+        # record-and-test every part (keeps the uid tables complete for a
+        # later arming); with the filter armed, drop exact duplicates before
+        # they touch the dense state, the audit counters, or the WAL
+        # (dropped messages' frame pins release with the batch)
+        fresh = [self._dedup.fresh(m.uid, m.process, m.ts) for m in run]
+        if self._dedup_armed:
+            run = [m for m, f in zip(run, fresh) if f]
             if not run:
                 return
         trc = rt._trace if rt.trace_on else None
@@ -544,7 +585,7 @@ class ServerShard:
         rt = self.rt
         if rt.n_proc == 1:
             # no peers to propagate to: the update is synchronized already
-            if rt.policy.value_bounded:
+            if rt.policy.tracks_sync:
                 # the echo rides the outbox, flushed after the pin release
                 materialize_msg(msg)
                 self._send(rt._chan_sp[self.sid][msg.process],
@@ -563,7 +604,9 @@ class ServerShard:
         # apply cycle's frame pins — the dense apply already consumed the
         # view in place, so this copy is the delivery path's only one
         materialize_msg(msg)
-        track = rt.policy.value_bounded   # ack cycle feeds VAP accounting only
+        # ack cycle feeds the unsynced accounting only (VAP value bound /
+        # elastic norm bound)
+        track = rt.policy.tracks_sync
         if track:
             hs = self.halfsync[msg.key]
             hs[msg.rows] += np.abs(msg.delta)
@@ -572,19 +615,40 @@ class ServerShard:
                 with rt._slock:
                     rt.stats.max_halfsync_mag = max(
                         rt.stats.max_halfsync_mag, mx)
+        hold = rt.policy.server_push_on_boundary
         n = 0
         for q in range(rt.n_proc):
             if q == msg.process:
                 continue
-            self._send(rt._chan_sp[self.sid][q],
-                       DeliverMsg(msg.uid, msg.worker, msg.process, self.sid,
-                                  msg.ts, msg.key, msg.rows, msg.delta))
+            d = DeliverMsg(msg.uid, msg.worker, msg.process, self.sid,
+                           msg.ts, msg.key, msg.rows, msg.delta)
+            if hold:
+                # ESSP: park until the next clock boundary, then one
+                # coalesced frame per peer (see _flush_essp_hold)
+                self._essp_hold.setdefault(q, []).append(d)
+            else:
+                self._send(rt._chan_sp[self.sid][q], d)
             n += 1
         with rt._slock:
             rt.stats.n_messages += n
             rt.stats.bytes_sent += msg.nbytes * n
         if track:
             self.pending[msg.uid] = (msg, n)
+
+    def _flush_essp_hold(self) -> None:
+        """ESSP server push: move every held delivery into the outbox, in
+        apply order per destination.  The outbox's per-channel batching
+        (the same framing the serving publish path rides) turns each
+        destination's backlog into one coalesced wire frame.  Callers must
+        flush *before* emitting any marker that vouches for the held
+        periods (clock echo, epoch-cut INF, post-install seed)."""
+        if not self._essp_hold:
+            return
+        hold, self._essp_hold = self._essp_hold, {}
+        chans = self.rt._chan_sp[self.sid]
+        for q, msgs in hold.items():
+            for m in msgs:
+                self._send(chans[q], m)
 
     def _ack_uid(self, uid: int) -> None:
         rt = self.rt
@@ -600,10 +664,11 @@ class ServerShard:
         # left by other interleavings
         hs = self.halfsync[msg.key]
         hs[msg.rows] -= np.abs(msg.delta)
-        if rt.policy.value_bounded:
-            # the synchronized-update echo only feeds the VAP unsynced
-            # accounting; for clock-only policies it is pure overhead (and
-            # the sole inbound traffic of a single-process run)
+        if rt.policy.tracks_sync:
+            # the synchronized-update echo only feeds the unsynced
+            # accounting (VAP / elastic); for clock-only policies it is
+            # pure overhead (and the sole inbound traffic of a
+            # single-process run)
             self._send(rt._chan_sp[self.sid][msg.process],
                        FullyDelivered(msg.uid, msg.worker, msg.key, msg.rows,
                                       msg.delta, self.sid))
@@ -627,7 +692,8 @@ class ServerShard:
         rt = self.rt
         if (self._fin_sent or len(self._done_procs) < rt.n_proc
                 or self.pending or any(self.queued.values())
-                or self._pending_part is not None or self._held):
+                or self._pending_part is not None or self._held
+                or self._essp_hold):
             return
         self._fin_sent = True
         for q in range(rt.n_proc):

@@ -3,12 +3,13 @@
 Two generators, one seed space:
 
 * :func:`random_schedule` — a seeded random *workload*: policy drawn from
-  SSP/VAP/CVAP (strong and weak), per-worker compute-time skew, stragglers,
-  and network latency/jitter for the simulator leg.  The simulator is the
-  paper's executable spec; :func:`assert_paper_bounds` checks the Lemma
-  bounds *exactly* on whatever it observed (zero recorded violations, clock
-  staleness ≤ s, element-wise unsynchronized magnitude ≤ max(u, v_thr),
-  strong-VAP half-sync ≤ max(u, v_thr)).
+  SSP/ESSP/VAP/CVAP (strong and weak)/elastic, per-worker compute-time
+  skew, stragglers, and network latency/jitter for the simulator leg.  The
+  simulator is the paper's executable spec; :func:`assert_paper_bounds`
+  checks the Lemma bounds *exactly* on whatever it observed (zero recorded
+  violations, clock staleness ≤ s, element-wise unsynchronized magnitude
+  ≤ max(u, v_thr), strong-VAP half-sync ≤ max(u, v_thr), elastic unsynced
+  L2 norm ≤ max(max‖u‖₂, B)).
 
 * :func:`random_membership_script` — a seeded random schedule of live
   membership faults for the *runtime* leg: add, remove, and kill/rejoin
@@ -100,15 +101,21 @@ def expected_final(seed: int, n_workers: int, n_clocks: int, fn=None
 
 
 def random_policy(rng: np.random.Generator):
-    """A seeded draw over the paper's bounded policies (SSP / VAP / CVAP,
-    strong and weak)."""
-    kind = rng.choice(["ssp", "vap", "cvap", "cvap_strong"])
+    """A seeded draw over the paper's bounded policies (SSP / ESSP / VAP /
+    CVAP strong and weak / elastic)."""
+    kind = rng.choice(["ssp", "essp", "vap", "cvap", "cvap_strong",
+                       "elastic"])
     s = int(rng.integers(1, 4))
     vthr = float(rng.uniform(1.0, 6.0))
     if kind == "ssp":
         return f"ssp{s}", policies.ssp(s)
+    if kind == "essp":
+        return f"essp{s}", policies.essp(s)
     if kind == "vap":
         return f"vap{vthr:.1f}", policies.vap(vthr)
+    if kind == "elastic":
+        nb = float(rng.uniform(6.0, 15.0))    # ~per-update L2 of det_fn
+        return f"el{nb:.1f}", policies.elastic(nb)
     strong = kind == "cvap_strong"
     return (f"cvap{s}_{vthr:.1f}{'s' if strong else ''}",
             policies.cvap(s, vthr, strong=strong))
@@ -157,6 +164,9 @@ def assert_paper_bounds(pol, stats) -> None:
         assert stats.max_unsynced_mag <= bound + 1e-9
         if pol.strong:
             assert stats.max_halfsync_mag <= bound + 1e-9
+    if pol.norm_bounded:
+        nb = max(stats.max_update_norm, pol.value_bound)     # max(‖u‖, B)
+        assert stats.max_unsynced_norm <= nb + 1e-9
 
 
 # ---------------------------------------------------------------------------

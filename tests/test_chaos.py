@@ -66,8 +66,10 @@ def test_sim_random_schedule_bounds_full(seed):
 
 _POLICIES = [
     ("ssp3", policies.ssp(3)),
+    ("essp3", policies.essp(3)),
     ("vap", policies.vap(4.5)),
     ("cvap", policies.cvap(3, 4.5)),
+    ("elastic", policies.elastic(12.0)),
 ]
 
 
@@ -91,13 +93,55 @@ def test_runtime_membership_chaos_smoke(polname, pol, tmp_path):
     assertions, the WAL alone must reconstruct the exact final state with
     zero lost/duplicated updates (snapshot-granularity loss is no longer
     tolerated)."""
-    seed = {"ssp3": 21, "vap": 22, "cvap": 23}[polname]
+    seed = {"ssp3": 21, "essp3": 24, "vap": 22, "cvap": 23,
+            "elastic": 25}[polname]
     n_clocks = 30
     wal_dir = str(tmp_path / "wal")
     rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, n_events=3,
                                    wal_dir=wal_dir)
     _assert_chaos_outcome(rt, stats, plan, seed, n_clocks)
     assert_wal_recovery(rt, seed, n_clocks, wal_dir)
+
+
+def test_wal_off_cross_epoch_duplicate_dropped(monkeypatch):
+    """Regression: uid dedup used to be armed only when a WAL was
+    configured, so on wal-off shards a transport-level duplicate of an
+    update frame landing after a membership epoch had begun was applied
+    twice (the re-framed copy carries a fresh monotone seq, so FIFO checks
+    cannot catch it).  The drop filter now arms permanently at the first
+    EpochBeginMsg: the injected duplicate must be dropped — zero recorded
+    violations, exact per-process counter audit, bitwise final state."""
+    import threading
+
+    from repro.runtime import PSRuntime
+    from repro.runtime.messages import UpdateMsg
+
+    injected = {"n": 0}
+    lock = threading.Lock()
+    orig = PSRuntime._send_many
+
+    def dup_send_many(self, chan, msgs):
+        orig(self, chan, msgs)
+        with lock:
+            if injected["n"]:
+                return
+            pick = next((m for m in msgs if isinstance(m, UpdateMsg)
+                         and m.epoch >= 1), None)
+            if pick is None:
+                return
+            injected["n"] = 1
+            dup = UpdateMsg(pick.uid, pick.worker, pick.process, pick.ts,
+                            pick.key, pick.rows.copy(), pick.delta.copy(),
+                            pick.epoch)
+        orig(self, chan, [dup])
+
+    monkeypatch.setattr(PSRuntime, "_send_many", dup_send_many)
+    seed = 27
+    n_clocks = 30
+    rt, stats, plan, _ = chaos_run(seed, policies.ssp(3), n_clocks,
+                                   n_events=3)     # wal_dir=None: wal-off
+    assert injected["n"] == 1, "no post-epoch update frame was ever sent"
+    _assert_chaos_outcome(rt, stats, plan, seed, n_clocks)
 
 
 @pytest.mark.slow
@@ -142,7 +186,8 @@ def test_runtime_membership_chaos_wal_wire_full(polname, pol, transport,
     wire — must reconstruct the exact final state with zero lost or
     duplicated updates (per-process counter audit), bitwise equal to the
     membership-free expectation."""
-    seed = {"ssp3": 91, "vap": 92, "cvap": 93}[polname]
+    seed = {"ssp3": 91, "essp3": 94, "vap": 92, "cvap": 93,
+            "elastic": 95}[polname]
     n_clocks = 40
     wal_dir = str(tmp_path / "wal")
     rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, transport=transport,
@@ -181,7 +226,8 @@ def test_runtime_autoscaler_chaos_smoke(polname, pol):
     """Zipf-skewed bursty load concentrates rows on one slot; the
     autoscaler splits/drains shards live while the Lemma bounds and the
     zero-lost/duplicated counter audit keep holding."""
-    seed = {"ssp3": 71, "vap": 72, "cvap": 73}[polname]
+    seed = {"ssp3": 71, "essp3": 75, "vap": 72, "cvap": 73,
+            "elastic": 76}[polname]
     n_clocks = 80
     fn = zipf_fn(seed)
     rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, autoscale=True,
@@ -214,7 +260,8 @@ def test_runtime_autoscaler_chaos_wire_full(polname, pol, transport):
     """The full matrix: forked OS clients on real wires (shm rings / TCP
     sockets) with the autoscaler churning membership — the epoch barrier,
     the piggybacked metrics loads, and the audit all cross the wire."""
-    seed = {"ssp3": 81, "vap": 82, "cvap": 83}[polname]
+    seed = {"ssp3": 81, "essp3": 84, "vap": 82, "cvap": 83,
+            "elastic": 85}[polname]
     n_clocks = 40
     fn = zipf_fn(seed)
     rt, stats, plan, _ = chaos_run(seed, pol, n_clocks, transport=transport,

@@ -16,6 +16,12 @@ def test_policy_constructors():
     assert not policies.vap(0.5).clock_bounded
     p = policies.cvap(2, 0.1, strong=True)
     assert p.clock_bounded and p.value_bounded and p.strong
+    e = policies.essp(2)
+    assert e.clock_bounded and not e.push_at_clock_only
+    assert e.server_push_on_boundary and not e.tracks_sync
+    el = policies.elastic(0.5)
+    assert el.norm_bounded and el.tracks_sync
+    assert not el.clock_bounded and not el.value_bounded
 
 
 def test_policy_validation():
@@ -27,11 +33,43 @@ def test_policy_validation():
         policies.Policy("vap", value_bound=0.0)
 
 
+def test_policy_rejects_inactive_bounds():
+    """Bounds the kind does not interpret raise instead of silently
+    dropping (the dead-parameter bugfix)."""
+    with pytest.raises(ValueError):
+        policies.Policy("vap", staleness=3, value_bound=0.5)
+    with pytest.raises(ValueError):
+        policies.Policy("elastic", staleness=3, value_bound=0.5)
+    with pytest.raises(ValueError):
+        policies.Policy("ssp", staleness=2, value_bound=0.5)
+    with pytest.raises(ValueError):
+        policies.Policy("bsp", value_bound=0.5)
+    with pytest.raises(ValueError):
+        policies.Policy("essp", staleness=1, value_bound=0.5)
+    with pytest.raises(ValueError):
+        policies.Policy("ssp", staleness=2, strong=True)
+    with pytest.raises(ValueError):
+        policies.Policy("elastic", value_bound=0.5, strong=True)
+    with pytest.raises(ValueError):
+        policies.Policy("essp", staleness=1, push_at_clock_only=True)
+    with pytest.raises(ValueError):
+        policies.Policy("elastic", value_bound=0.5, push_at_clock_only=True)
+    # interpreted combinations stay legal
+    policies.Policy("bsp", staleness=3)          # clock-bounded, read by gate
+    policies.Policy("cvap", staleness=2, value_bound=0.5, strong=True)
+    policies.Policy("vap", value_bound=0.5)
+    policies.Policy("elastic", value_bound=0.5)
+
+
 def test_from_spec():
     p = policies.from_spec(ConsistencySpec(model="cvap", staleness=4,
                                            value_bound=0.25))
     assert p.kind == "cvap" and p.staleness == 4 and p.value_bound == 0.25
     assert policies.from_spec(ConsistencySpec(model="bsp")).kind == "bsp"
+    e = policies.from_spec(ConsistencySpec(model="essp", staleness=2))
+    assert e.kind == "essp" and e.staleness == 2
+    el = policies.from_spec(ConsistencySpec(model="elastic", value_bound=0.7))
+    assert el.kind == "elastic" and el.value_bound == 0.7 and el.norm_bounded
 
 
 def test_clock_gate_bsp_is_barrier():

@@ -36,6 +36,25 @@ def test_value_gate_always_admits_from_zero(vthr, delta):
     assert ok
 
 
+@given(vthr=st.floats(0.01, 10), acc=st.floats(0, 5), delta=st.floats(0.0, 5))
+@settings(**SET)
+def test_elastic_gate_never_lets_nonzero_accum_exceed(vthr, acc, delta):
+    """If elastic_gate admits onto a non-trivial accumulator, the resulting
+    unsynced norm stays within the configured bound B."""
+    p = policies.elastic(vthr)
+    if controller.elastic_gate(p, acc, acc + delta) and acc > 1e-12:
+        assert acc + delta <= vthr + 1e-9
+
+
+@given(vthr=st.floats(0.01, 10), norm=st.floats(0, 50))
+@settings(**SET)
+def test_elastic_gate_always_admits_from_zero(vthr, norm):
+    """An empty accumulator always admits — the liveness half of the
+    max(max‖u‖, B) unsynced-norm bound."""
+    p = policies.elastic(vthr)
+    assert controller.elastic_gate(p, 0.0, norm)
+
+
 @given(s=st.integers(0, 5), clock=st.integers(0, 20),
        fr=st.lists(st.integers(-1, 20), min_size=1, max_size=6))
 @settings(**SET)
@@ -45,6 +64,17 @@ def test_clock_gate_monotone_in_frontier(s, clock, fr):
     fr = np.asarray(fr)
     if controller.clock_gate(p, clock, fr):
         assert controller.clock_gate(p, clock, fr + 1)
+
+
+@given(s=st.integers(0, 5), clock=st.integers(0, 20),
+       fr=st.lists(st.integers(-1, 20), min_size=1, max_size=6))
+@settings(**SET)
+def test_clock_gate_essp_equals_ssp(s, clock, fr):
+    """ESSP keeps SSP's read gate — eager push shrinks *observed* staleness
+    but the worst-case admission window is identical."""
+    fr = np.asarray(fr)
+    assert (controller.clock_gate(policies.essp(s), clock, fr)
+            == controller.clock_gate(policies.ssp(s), clock, fr))
 
 
 @given(u=st.floats(0, 5), vthr=st.floats(0.01, 5), P=st.integers(2, 64))
@@ -71,7 +101,8 @@ def test_regret_bound_positive_and_sqrtT(T, F, L, v, P):
 
 @given(
     P=st.integers(2, 6),
-    kind=st.sampled_from(["bsp", "ssp", "cap", "vap", "cvap"]),
+    kind=st.sampled_from(["bsp", "ssp", "cap", "essp", "vap", "cvap",
+                          "elastic"]),
     s=st.integers(0, 3),
     vthr=st.floats(0.05, 1.0),
     strong=st.booleans(),
@@ -80,12 +111,20 @@ def test_regret_bound_positive_and_sqrtT(T, F, L, v, P):
 )
 @settings(deadline=None, max_examples=15)
 def test_simulator_invariants_random(P, kind, s, vthr, strong, delay, seed):
-    if kind in ("bsp", "ssp", "cap"):
-        strong = False
-    pol = policies.Policy(kind, staleness=s,
-                          value_bound=vthr if kind in ("vap", "cvap") else policies.INF,
-                          strong=strong,
-                          push_at_clock_only=kind in ("bsp", "ssp"))
+    if kind == "bsp":
+        pol = policies.bsp()
+    elif kind == "ssp":
+        pol = policies.ssp(s)
+    elif kind == "cap":
+        pol = policies.cap(s)
+    elif kind == "essp":
+        pol = policies.essp(s)
+    elif kind == "vap":
+        pol = policies.vap(vthr, strong=strong)
+    elif kind == "cvap":
+        pol = policies.cvap(s, vthr, strong=strong)
+    else:
+        pol = policies.elastic(vthr)
     rng = np.random.default_rng(seed)
 
     def fn(w, clock, view, r):
@@ -106,6 +145,9 @@ def test_simulator_invariants_random(P, kind, s, vthr, strong, delay, seed):
         if pol.strong:
             assert stats.max_divergence <= theory.strong_vap_divergence_bound(
                 stats.max_update_mag, pol.value_bound) + 1e-9
+    if pol.norm_bounded:
+        nb = controller.elastic_unsynced_bound(pol, stats.max_update_norm)
+        assert stats.max_unsynced_norm <= nb + 1e-9
 
 
 # ---------------------------------------------------------------------------

@@ -52,8 +52,10 @@ _POLICIES = [
     ("bsp", policies.bsp()),
     ("ssp2", policies.ssp(2)),
     ("cap1", policies.cap(1)),
+    ("essp2", policies.essp(2)),
     ("vap", policies.vap(4.5)),
     ("cvap_strong", policies.cvap(2, 4.5, strong=True)),
+    ("elastic", policies.elastic(12.0)),
 ]
 
 
@@ -127,8 +129,10 @@ def test_runtime_final_state_equals_simulator_multiprocess(
 
 _STRESS = [
     ("ssp3", policies.ssp(3)),
+    ("essp3", policies.essp(3)),
     ("vap", policies.vap(1.5)),
     ("cvap", policies.cvap(3, 1.5)),
+    ("elastic", policies.elastic(5.0)),
 ]
 
 
@@ -157,11 +161,17 @@ def test_stress_invariants_hold_mid_run(polname, pol):
     if pol.clock_bounded:
         # the bound held...
         assert st.max_observed_staleness <= pol.staleness
-        # ...and asynchrony actually happened (the check wasn't vacuous)
-        assert st.max_observed_staleness > 0
+        # ...and asynchrony actually happened (the check wasn't vacuous).
+        # ESSP's eager boundary push may legitimately drive observed
+        # staleness to zero, so the non-vacuity half is SSP-only.
+        if not pol.server_push_on_boundary:
+            assert st.max_observed_staleness > 0
     if pol.value_bounded:
         bound = max(st.max_update_mag, pol.value_bound)
         assert 0.0 < st.max_unsynced_mag <= bound + 1e-9
+    if pol.norm_bounded:
+        nb = max(st.max_update_norm, pol.value_bound)
+        assert 0.0 < st.max_unsynced_norm <= nb + 1e-9
 
 
 @pytest.mark.parametrize("polname,pol", _STRESS, ids=[p[0] for p in _STRESS])
@@ -186,6 +196,9 @@ def test_stress_invariants_hold_multiprocess(polname, pol):
     if pol.value_bounded:
         bound = max(st.max_update_mag, pol.value_bound)
         assert 0.0 < st.max_unsynced_mag <= bound + 1e-9
+    if pol.norm_bounded:
+        nb = max(st.max_update_norm, pol.value_bound)
+        assert 0.0 < st.max_unsynced_norm <= nb + 1e-9
 
 
 def test_live_master_reads_multiprocess():
@@ -238,6 +251,46 @@ def test_lda_bsp_trajectories_match_across_layers():
     np.testing.assert_allclose(lls_spmd, lls_sim, rtol=0, atol=1e-9)
     # and the Gibbs chain is actually sampling (trajectory moves)
     assert lls_sim[-1] != lls_sim[0]
+
+
+def test_lda_spmd_new_kinds_trajectories():
+    """SPMD leg for the new kinds.  Under lockstep SPMD every replica steps
+    together, so ESSP's eager server push has nothing extra to deliver and
+    the trigger collapses to SSP's clock trigger — trajectories must match
+    bitwise.  Elastic with a vanishing norm bound must sync on every step
+    that moved anything, reproducing the BSP trajectory."""
+    from repro.apps import lda
+    from repro.data import synthetic_corpus
+
+    corpus = synthetic_corpus(n_docs=12, vocab_size=24, n_topics=3,
+                              doc_len=15, seed=1)
+    kw = dict(n_topics=3, n_workers=3, n_clocks=4, seed=0)
+    lls_ssp = lda.run_lda_spmd(corpus, policy=policies.ssp(1), **kw)
+    lls_essp = lda.run_lda_spmd(corpus, policy=policies.essp(1), **kw)
+    np.testing.assert_allclose(lls_essp, lls_ssp, rtol=0, atol=0)
+
+    lls_bsp = lda.run_lda_spmd(corpus, policy=policies.bsp(), **kw)
+    lls_el = lda.run_lda_spmd(corpus, policy=policies.elastic(1e-6), **kw)
+    np.testing.assert_allclose(lls_el, lls_bsp, rtol=0, atol=1e-9)
+
+
+def test_essp_observed_staleness_not_worse_than_ssp():
+    """The point of ESSP (arXiv:1410.8043): at an equal configured bound the
+    eager boundary push can only shrink the staleness workers actually
+    observe.  Checked on the executable spec with a laggy network, where
+    SSP reads genuinely run stale."""
+    seed = 4
+    fn = _sched_fn(seed)
+    out = {}
+    for name, pol in (("ssp", policies.ssp(3)), ("essp", policies.essp(3))):
+        sim = AsyncPS(6, pol, _x0(), seed=seed, straggler={0: 2.0},
+                      network=NetworkModel(base_delay=0.8, jitter=0.5,
+                                           seed=seed))
+        st = sim.run(fn, 20)
+        assert st.violations == []
+        out[name] = st.max_observed_staleness
+    assert out["ssp"] > 0          # the comparison is not vacuous
+    assert out["essp"] <= out["ssp"]
 
 
 def test_lda_runtime_backend_trains():

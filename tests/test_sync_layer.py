@@ -8,8 +8,9 @@ import numpy as np
 import pytest
 
 from repro.core import policies
-from repro.core.sync import (apply_and_sync, force_sync, init_sync_state,
-                             sync_trigger, tree_max_abs, vap_invariant_ok)
+from repro.core.sync import (apply_and_sync, elastic_invariant_ok, force_sync,
+                             init_sync_state, sync_trigger, tree_l2_norm,
+                             tree_max_abs, vap_invariant_ok)
 
 
 def _params():
@@ -89,6 +90,51 @@ def test_oversized_update_admitted_bound_tracks_u():
     assert bool(synced)            # sync epoch triggers right away
     assert bool(vap_invariant_ok(pol, s))
     assert float(s.max_update_mag) == pytest.approx(5.0)
+
+
+def test_essp_trigger_equals_ssp():
+    """Under lockstep SPMD ESSP collapses to SSP: same clock trigger, step
+    for step."""
+    p1, s1 = _params(), init_sync_state(_params())
+    p2, s2 = _params(), init_sync_state(_params())
+    for _ in range(6):
+        u = {"w": jnp.ones(4) * .01, "b": jnp.ones(2) * .01}
+        p1, s1, t1 = _step(p1, s1, u, policies.ssp(2))
+        p2, s2, t2 = _step(p2, s2, u, policies.essp(2))
+        assert bool(t1) == bool(t2)
+        np.testing.assert_array_equal(np.asarray(p1["w"]), np.asarray(p2["w"]))
+
+
+def test_elastic_norm_trigger():
+    """Elastic syncs when the accumulated drift's L2 norm would pass B, and
+    the whole-accumulator invariant holds at every step."""
+    pol = policies.elastic(0.25)
+    p, s = _params(), init_sync_state(_params())
+    seen = []
+    for _ in range(6):
+        # per-step delta norm = sqrt(6 * 0.1^2) ~ 0.245 <= B; two steps pass
+        p, s, synced = _step(p, s, {"w": jnp.ones(4) * .1, "b": jnp.ones(2) * .1},
+                             pol)
+        seen.append(bool(synced))
+        assert bool(elastic_invariant_ok(pol, s))
+    assert seen == [False, True, False, True, False, True]
+
+
+def test_elastic_oversized_update_bound_tracks_norm():
+    """A single update with L2 norm > B is admitted; the invariant bound
+    widens to max(max‖u‖₂, B) exactly as in the PS layers."""
+    pol = policies.elastic(0.1)
+    p, s = _params(), init_sync_state(_params())
+    u = {"w": jnp.ones(4) * 5.0, "b": jnp.zeros(2)}
+    p, s, synced = _step(p, s, u, pol)
+    assert bool(synced)
+    assert bool(elastic_invariant_ok(pol, s))
+    assert float(s.max_update_l2) == pytest.approx(10.0)   # sqrt(4*25)
+
+
+def test_tree_l2_norm():
+    t = {"a": jnp.asarray([3.0, 0.0]), "b": jnp.asarray([[0.0, 4.0]])}
+    assert float(tree_l2_norm(t)) == pytest.approx(5.0)
 
 
 def test_trigger_uniform_with_trigger_axes_noop_single():
